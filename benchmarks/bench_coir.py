@@ -1,0 +1,18 @@
+"""§IV-A: COIR metadata compression vs per-weight-plane rulebook."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_scene, emit, scene_metadata
+from repro.core.coir import coir_size_words, rulebook_size_words
+
+
+def run():
+    for res in (32, 48, 64):
+        t, _ = build_scene(1, res, 24576)
+        coir, _, _ = scene_metadata(t, res)
+        cw = int(coir_size_words(coir))
+        rw = int(rulebook_size_words(coir))
+        arf = float(coir.arf())
+        emit(f"coir/res{res}/compression", 0.0,
+             f"{rw / cw:.2f}x (ARF={arf:.1f}; coir={cw} rulebook={rw} words)")

@@ -1,0 +1,37 @@
+"""Wall-clock microbench of reduced-arch train/decode steps (CPU host)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.models.transformer import forward, init_lm
+from repro.serving.engine import make_prefill, make_serve_step
+from repro.training.optimizer import OptHParams
+from repro.training.train_loop import init_train_state, make_train_step
+
+ARCHS = ["stablelm-1.6b", "gemma2-2b", "rwkv6-7b", "moonshot-v1-16b-a3b"]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        hp = OptHParams()
+        state = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+        step = jax.jit(make_train_step(cfg, hp))
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (4, 65)), jnp.int32)}
+        us = time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch)
+        emit(f"lm/{arch}/train_step", us, "reduced cfg, b=4 s=64, CPU")
+        params = state["params"]
+        prefill = jax.jit(make_prefill(cfg, cache_pad=4))
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+        _, cache = prefill(params, toks)
+        serve = jax.jit(make_serve_step(cfg))
+        tok = jnp.zeros((2, 1), jnp.int32)
+        us = time_fn(lambda p, t, c: serve(p, t, c)[0], params, tok, cache)
+        emit(f"lm/{arch}/decode_step", us, "reduced cfg, b=2, CPU")

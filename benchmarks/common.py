@@ -1,0 +1,48 @@
+"""Shared benchmark scaffolding: scene building + timing + CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import soar
+from repro.core.coir import COIR
+from repro.core.hashgrid import build_neighbor_table, kernel_offsets
+from repro.core.sparse_conv import submanifold_coir
+from repro.data.scenes import make_scene
+from repro.sparse.tensor import SparseVoxelTensor
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def build_scene(seed=0, resolution=48, capacity=16384):
+    coords, feats, labels, mask = make_scene(seed, resolution, capacity)
+    t = SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                          jnp.asarray(mask))
+    return t, labels
+
+
+def scene_metadata(t: SparseVoxelTensor, resolution: int):
+    coir = submanifold_coir(t, resolution, 3)
+    nbr = np.asarray(build_neighbor_table(
+        t.coords, t.mask, jnp.asarray(kernel_offsets(3)), resolution))
+    order = soar.soar_order(nbr, np.asarray(t.mask), 512)
+    return coir, nbr, order

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0.0 for
+analytical/model benchmarks; see each module's docstring for the mapping to
+the paper's tables and what is measured vs modeled).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_coir,
+        bench_dataflow,
+        bench_dispatch,
+        bench_lm,
+        bench_moe,
+        bench_scn,
+        bench_soar,
+        bench_spade_attrs,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in (bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
+                bench_dataflow, bench_scn, bench_moe, bench_lm):
+        mt = time.time()
+        mod.run()
+        print(f"# {mod.__name__} done in {time.time() - mt:.1f}s",
+              file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

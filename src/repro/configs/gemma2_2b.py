@@ -1,0 +1,31 @@
+"""Gemma-2 2B dense decoder.
+
+[arXiv:2408.00118; hf] — alternating local(4096)/global attention, logit
+softcapping (attn 50, final 30), GeGLU, embedding scaling, tied embeddings.
+8 q-heads don't divide the 16-wide model axis -> sequence attention sharding.
+long_500k is skipped: the global layers are full attention (DESIGN.md §5).
+"""
+from repro.configs.base import GLOBAL, LOCAL, ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma2-2b",
+        family="dense",
+        n_layers=26,
+        d_model=2304,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=9216,
+        vocab_size=256000,
+        attn_pattern=(LOCAL, GLOBAL),
+        window=4096,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        rope_theta=10000.0,
+        act="geglu",
+        scale_embeddings=True,
+        tie_embeddings=True,
+        attn_sharding="sequence",
+    )
+)

@@ -1,0 +1,30 @@
+"""Llama-4 Maverick 400B-A17B class MoE decoder.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] — assigned spec taken
+literally: every layer MoE, 128 experts, top-1 routing (Switch-style).
+40 q-heads do not divide the 16-wide model axis, so attention uses sequence
+sharding (DESIGN.md §5); experts shard 8-per-device (EP).
+"""
+from repro.configs.base import GLOBAL, ModelConfig, MoEConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        attn_pattern=(GLOBAL,),
+        rope_theta=500000.0,
+        act="swiglu",
+        tie_embeddings=False,
+        moe=MoEConfig(n_experts=128, top_k=1, capacity_factor=1.25),
+        optimizer="adafactor",   # fits single-pod 16 GB/chip (DESIGN.md §6)
+        attn_sharding="sequence",
+        sub_quadratic=False,
+    )
+)

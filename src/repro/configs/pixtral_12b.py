@@ -1,0 +1,28 @@
+"""Pixtral 12B multimodal decoder (backbone only; ViT frontend stubbed).
+
+[hf:mistralai/Pixtral-12B-2409; unverified] — mistral-nemo-style decoder;
+``input_specs`` supplies 256 precomputed patch embeddings per sequence that
+replace the first 256 token embeddings (assignment spec: frontend is a STUB).
+"""
+from repro.configs.base import GLOBAL, ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="pixtral-12b",
+        family="vlm",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=131072,
+        attn_pattern=(GLOBAL,),
+        rope_theta=1000000.0,
+        act="swiglu",
+        tie_embeddings=False,
+        frontend="vision",
+        n_frontend_tokens=256,
+        attn_sharding="heads",
+    )
+)

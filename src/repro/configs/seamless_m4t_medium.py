@@ -1,0 +1,29 @@
+"""SeamlessM4T-medium encoder-decoder (speech frontend stubbed).
+
+[arXiv:2308.11596; hf] — 12 encoder + 12 decoder layers; ``input_specs``
+supplies precomputed frame embeddings as the encoder input (assignment
+spec: modality frontend is a STUB). vocab 256206 is padded to 256256 for
+16-way TP (logits masked) — the only config deviation.
+"""
+from repro.configs.base import GLOBAL, ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        attn_pattern=(GLOBAL,),
+        rope_theta=10000.0,
+        act="gelu",
+        tie_embeddings=True,
+        encoder_layers=12,
+        frontend="audio",
+        attn_sharding="heads",
+    )
+)

@@ -1,0 +1,92 @@
+"""AccSS3D technique transfer: SPADE/COIR machinery applied to MoE dispatch.
+
+Expert routing is token-level spatial sparsity: which (token, expert) pairs
+are valid depends only on the data, the unit of work per valid pair is a
+matrix-vector product (token activation x expert matrix), and per-expert load
+is as skewed as per-region ARF. The mapping:
+
+  AccSS3D                      MoE
+  ----------------------       -------------------------------
+  active voxels                routed tokens
+  weight plane (1 of 27)       expert (1 of E)
+  ARF / SA_MO                  tokens-per-expert load
+  RST q-quantile tile alloc    capacity factor = q-quantile load
+  COIR index list + bitmask    dispatch table (E, cap) + validity
+  ops-sorted tile schedule     experts sorted by load over cores
+
+``plan_capacity`` is the paper's RST applied to router statistics;
+``build_dispatch`` builds the COIR-style (expert-major = "CIRF over experts")
+dispatch metadata used by ``repro.models.moe`` and by the grouped-GEMM
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def plan_capacity(
+    expert_loads: np.ndarray,
+    n_experts: int,
+    tokens_per_batch: int,
+    top_k: int,
+    mode: str = "RST",
+    quantile: float = 0.90,
+    round_to: int = 8,
+) -> int:
+    """Static expert capacity from observed load samples.
+
+    expert_loads: (samples, E) token counts per expert per batch.
+    SST allocates the observed max (never drops, wastes memory); RST
+    allocates the q-quantile (the paper's relaxed static tiling; overshoot
+    tokens are dropped-to-residual exactly like overshooting tiles split).
+    """
+    loads = np.asarray(expert_loads, np.float64)
+    if mode == "SST":
+        cap = float(loads.max())
+    else:
+        cap = float(np.quantile(loads, quantile))
+    cap = max(cap, 1.0)
+    uniform = tokens_per_batch * top_k / n_experts
+    cap = max(cap, uniform)  # never below perfectly-balanced load
+    return int(np.ceil(cap / round_to) * round_to)
+
+
+def capacity_factor(capacity: int, tokens: int, top_k: int, n_experts: int) -> float:
+    return capacity * n_experts / max(tokens * top_k, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity"))
+def build_dispatch(expert_idx: jax.Array, n_experts: int, capacity: int):
+    """COIR-style dispatch metadata for top-k routing.
+
+    expert_idx: (T, k) int32 expert of each token assignment.
+    Returns (slot (T, k) int32 position within the expert's capacity or -1 if
+    dropped, table (E, capacity) int32 token id or -1) — the expert-major
+    index list (CIRF analogue) plus the token-major slots (CORF analogue).
+    """
+    t, k = expert_idx.shape
+    flat = expert_idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                        # slot per assignment
+    slot = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    slot = jnp.where(keep, slot, -1).reshape(t, k)
+    token_of = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)
+    ).reshape(-1)
+    rows = jnp.where(keep, flat, n_experts)
+    cols = jnp.where(keep, slot.reshape(-1), 0)
+    table = jnp.full((n_experts, capacity), -1, jnp.int32)
+    table = table.at[rows, cols].set(
+        jnp.where(keep, token_of, -1), mode="drop"
+    )
+    return slot, table
+
+
+def expert_load_stats(expert_idx: np.ndarray, n_experts: int) -> np.ndarray:
+    """(E,) token counts — the MoE 'sparsity attribute' extraction pass."""
+    return np.bincount(np.asarray(expert_idx).reshape(-1), minlength=n_experts)

@@ -1,0 +1,103 @@
+"""Tiled COIR metadata (dM) for SSpNNA execution (§V-C processing flow).
+
+OTF-SPADE re-groups the adjacency/COIR entries into per-tile metadata blocks
+sized by the SPADE plan: each tile owns a run of dO consecutive SOAR-ordered
+outputs, the tile's unique input rows (its L1 working set), and *tile-local*
+partner indices. Tiles whose unique-input count overshoots the RST
+allocation are split in two (next power of two), exactly the paper's
+overshoot rule.
+
+Host-side numpy; the result is a stack of fixed-shape arrays consumed by the
+Pallas kernel (``repro.kernels.sspnna``) and by the DMA-table generator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class TilePlan:
+    out_rows: np.ndarray    # (T, dO) int32 global output row per tile slot, -1 pad
+    in_rows: np.ndarray     # (T, dI) int32 global input rows (tile working set), -1 pad
+    local_idx: np.ndarray   # (T, dO, K) int32 index into the tile's in_rows, -1 hole
+    pair_counts: np.ndarray  # (T,) valid pairs per tile (ops-per-tile / dC / dN)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.out_rows.shape[0]
+
+    @property
+    def delta_o(self) -> int:
+        return self.out_rows.shape[1]
+
+    @property
+    def delta_i(self) -> int:
+        return self.in_rows.shape[1]
+
+
+def build_tile_plan(
+    cirf_indices: np.ndarray,
+    order: np.ndarray,
+    delta_o: int,
+    delta_i: int,
+) -> TilePlan:
+    """Regroup out-major COIR into fixed-shape tile metadata.
+
+    cirf_indices: (V, K) global partner indices (-1 holes).
+    order: SOAR (or raster) ordering of active output rows.
+    """
+    cirf_indices = np.asarray(cirf_indices)
+    k = cirf_indices.shape[1]
+
+    tiles: list[np.ndarray] = []
+
+    def emit(rows: np.ndarray):
+        """Split until the unique-input working set fits delta_i."""
+        part = cirf_indices[rows]
+        uniq = np.unique(part[part >= 0])
+        if len(uniq) > delta_i and len(rows) > 1:
+            mid = len(rows) // 2
+            emit(rows[:mid])
+            emit(rows[mid:])
+        else:
+            tiles.append(rows)
+
+    for s in range(0, len(order), delta_o):
+        emit(np.asarray(order[s:s + delta_o], np.int64))
+
+    t = len(tiles)
+    out_rows = np.full((t, delta_o), -1, np.int32)
+    in_rows = np.full((t, delta_i), -1, np.int32)
+    local_idx = np.full((t, delta_o, k), -1, np.int32)
+    pair_counts = np.zeros((t,), np.int64)
+    for ti, rows in enumerate(tiles):
+        out_rows[ti, : len(rows)] = rows
+        part = cirf_indices[rows]  # (r, K)
+        valid = part >= 0
+        uniq = np.unique(part[valid])
+        if len(uniq) > delta_i:  # single row overshoot: truncate working set
+            uniq = uniq[:delta_i]
+        in_rows[ti, : len(uniq)] = uniq
+        loc = np.searchsorted(uniq, part)
+        loc = np.clip(loc, 0, max(len(uniq) - 1, 0))
+        hit = valid & (uniq[loc] == part) if len(uniq) else np.zeros_like(valid)
+        local_idx[ti, : len(rows)] = np.where(hit, loc, -1)
+        pair_counts[ti] = int(hit.sum())
+    return TilePlan(out_rows, in_rows, local_idx, pair_counts)
+
+
+def plan_dma_tables(plan: TilePlan) -> dict:
+    """DMA descriptor accounting (§V-A-3): ordered datatype -> one block
+    entry per tile; unordered datatype -> one entry per voxel. Returns entry
+    counts + transferred elements for the energy/bandwidth model."""
+    t = plan.n_tiles
+    in_valid = (plan.in_rows >= 0).sum()
+    out_valid = (plan.out_rows >= 0).sum()
+    return {
+        "block_entries": t,            # ordered side: 1 per tile
+        "voxel_entries": int(in_valid),  # unordered side: per voxel
+        "in_rows_transferred": int(in_valid),
+        "out_rows_transferred": int(out_valid),
+    }

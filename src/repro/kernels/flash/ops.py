@@ -1,0 +1,28 @@
+"""jit'd wrapper: model-layout flash attention (GQA folding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.flash import flash_attention
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, window=None, softcap=None,
+                         block_q=128, block_kv=128, interpret=True):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    GQA: q heads are grouped per kv head; k/v are repeated group-wise by
+    folding (B, Hkv, G) into the kernel's leading grid dimension.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hkv, g, sq, d)
+    qf = qf.reshape(b * hkv * g, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), g, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), g, axis=0)
+    o = flash_attention(qf, kf, vf, causal=causal, window=window,
+                        softcap=softcap, block_q=block_q, block_kv=block_kv,
+                        interpret=interpret)
+    o = o.reshape(b, hkv * g, sq, d).transpose(0, 2, 1, 3)
+    return o

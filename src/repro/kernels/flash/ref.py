@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """q: (B, H, Sq, D); k/v: (B, H, Skv, D) -> (B, H, Sq, D).
+
+    Sq positions are right-aligned on Skv (q token i sits at absolute
+    position Skv - Sq + i), matching decode/prefill continuation semantics.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = skv - sq + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Grouped expert GEMM Pallas kernel (the MoE face of SSpNNA's SyMAC).
+
+The MoE dispatch produces (E, cap, d) expert inputs with a validity mask —
+token-level spatial sparsity in exactly the paper's sense: each (expert,
+slot) pair is a matrix-vector unit of work, grouped per expert the way
+WAVES groups active voxels per weight plane. The kernel runs one MXU GEMM
+per (expert, f-block) grid cell with the f32 accumulator VMEM-resident, and
+skips nothing (capacity padding is zeroed — RST's overshoot rule bounds the
+waste, see core/moe_spade).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, valid_ref, o_ref):
+    x = x_ref[0]                    # (C, d)
+    w = w_ref[0]                    # (d, bf)
+    valid = valid_ref[0]            # (C,)
+    x = jnp.where(valid[:, None], x, 0)
+    o_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def grouped_gemm(
+    xin: jax.Array,    # (E, C, d)
+    w: jax.Array,      # (E, d, f)
+    valid: jax.Array,  # (E, C) bool
+    *,
+    block_f: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    e, c, d = xin.shape
+    f = w.shape[2]
+    bf = block_f or f
+    assert f % bf == 0
+    grid = (e, f // bf)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d, bf), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, c), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, bf), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), xin.dtype),
+        interpret=interpret,
+    )(xin, w, valid)

@@ -1,0 +1,7 @@
+"""jit'd wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+from repro.kernels.moe_gemm.moe_gemm import grouped_gemm
+from repro.kernels.moe_gemm.ref import grouped_gemm_ref
+
+__all__ = ["grouped_gemm", "grouped_gemm_ref"]

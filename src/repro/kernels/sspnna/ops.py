@@ -1,0 +1,78 @@
+"""jit'd public wrapper: sparse conv through the SSpNNA kernel + tile plan.
+
+Implements the full §V-A execution flow on one chip:
+  global feats --(DMA: per-voxel entries)--> tile working sets
+  tile metadata + weights --> SSpNNA kernel --> tile outputs
+  tile outputs --(DMA: block entries, ordered)--> global output rows
+
+The gather/scatter here are the DMA engines' job in the paper (tables built
+by ``repro.core.tiles.plan_dma_tables``); XLA dynamic-gather performs them,
+and only the compute-dense inner tile runs in Pallas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiles import TilePlan
+from repro.kernels.sspnna.ref import sspnna_tile_ref
+from repro.kernels.sspnna.sspnna import sspnna_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
+def sspnna_conv(
+    feats: jax.Array,         # (V_in, C) global input features
+    weights: jax.Array,       # (K, C, N)
+    out_rows: jax.Array,      # (T, dO) from TilePlan
+    in_rows: jax.Array,       # (T, dI)
+    local_idx: jax.Array,     # (T, dO, K)
+    *,
+    n_out: int,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Tiled sparse convolution -> (n_out, N) features."""
+    in_ok = in_rows >= 0
+    tile_feats = jnp.take(feats, jnp.maximum(in_rows, 0), axis=0)
+    tile_feats = jnp.where(in_ok[..., None], tile_feats, 0)
+    if use_kernel:
+        tile_out = sspnna_tiles(
+            tile_feats, local_idx, weights, block_n=block_n, interpret=interpret
+        )
+    else:
+        tile_out = sspnna_tile_ref(tile_feats, local_idx, weights)
+    n = weights.shape[2]
+    out_ok = out_rows >= 0
+    rows = jnp.where(out_ok, out_rows, n_out)
+    out = jnp.zeros((n_out, n), tile_out.dtype)
+    # tiles own disjoint output runs -> plain set, no accumulation race
+    out = out.at[rows.reshape(-1)].set(
+        tile_out.reshape(-1, n), mode="drop"
+    )
+    return out
+
+
+def sspnna_conv_from_plan(
+    feats: jax.Array,
+    weights: jax.Array,
+    plan: TilePlan,
+    *,
+    n_out: int,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_n: int | None = None,
+) -> jax.Array:
+    return sspnna_conv(
+        feats,
+        weights,
+        jnp.asarray(plan.out_rows),
+        jnp.asarray(plan.in_rows),
+        jnp.asarray(plan.local_idx),
+        n_out=n_out,
+        use_kernel=use_kernel,
+        interpret=interpret,
+        block_n=block_n,
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSpNNA tile kernel.
+
+Semantics: for tile t, output slot o, weight plane k, the partner feature is
+``feats[t, local_idx[t, o, k]]`` (zeros when the index is -1); the output is
+the sum over planes of partner @ weight[k], accumulated in f32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sspnna_tile_ref(feats, local_idx, weights):
+    """feats: (T, dI, C); local_idx: (T, dO, K); weights: (K, C, N)
+    -> (T, dO, N) in feats.dtype."""
+    valid = local_idx >= 0
+    idx = jnp.maximum(local_idx, 0)
+    # (T, 1, dI, C) gathered along dI by (T, dO, K, 1) -> (T, dO, K, C)
+    gathered = jnp.take_along_axis(feats[:, None, :, :], idx[..., None], axis=2)
+    gathered = jnp.where(valid[..., None], gathered, 0)
+    out = jnp.einsum(
+        "tokc,kcn->ton", gathered, weights, preferred_element_type=jnp.float32
+    )
+    return out.astype(feats.dtype)

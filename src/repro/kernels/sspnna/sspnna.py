@@ -1,0 +1,81 @@
+"""SSpNNA tile kernel: fused gather-GEMM over weight planes (Pallas, TPU).
+
+TPU adaptation of the SSpNNA core (§IV-D):
+
+* **WAVES front-end** (weight-plane active-voxel scheduling): the tile's
+  COIR block ``local_idx`` already names, per output slot and weight plane,
+  the partner row in the tile-local feature buffer. The kernel converts each
+  plane's index column into a partial-permutation one-hot matrix on the VPU
+  (compare-against-iota + select) — this is the pair-selection logic that
+  WAVES' smart-lookup performs, 4 voxels/cycle, on the ASIC.
+* **SyMAC back-end** (systolic + multicast MACs): both the gather
+  (``onehot @ feats``) and the per-plane contraction (``gathered @ W[k]``)
+  run on the MXU with f32 accumulation kept VMEM-resident across all K
+  planes — the MXU's operand broadcast plays SyMAC's IFM multicast, and the
+  persistent accumulator is the PEs' local ACC-OFM buffering.
+
+Why one-hot instead of a dynamic VMEM gather: TPU VMEM has no random
+scatter/gather port; a partial-permutation matmul maps irregular access onto
+the systolic array at full utilization, which *is* the paper's core move —
+turn sparse bookkeeping into dense compute at M-V (here tile-level)
+granularity.
+
+Grid: (tiles, N-blocks). Per-cell VMEM: dI*C + dO*K + K*C*dN + dO*dN(f32)
+plus a dO*dI one-hot scratch — SPADE's dT budget (Eqn 1) with the one-hot
+standing in for the link-list buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(feats_ref, idx_ref, w_ref, out_ref, *, n_planes: int):
+    feats = feats_ref[0]          # (dI, C)
+    idx = idx_ref[0]              # (dO, K)
+    d_i = feats.shape[0]
+    d_o = idx.shape[0]
+    acc = jnp.zeros((d_o, w_ref.shape[2]), jnp.float32)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (d_o, d_i), 1)
+    for k in range(n_planes):  # static unroll: one WAVES plane per step
+        col = idx[:, k]
+        onehot = (col[:, None] == iota_i).astype(feats.dtype)  # VPU select
+        gathered = jnp.dot(onehot, feats, preferred_element_type=jnp.float32)
+        acc = acc + jnp.dot(
+            gathered.astype(feats.dtype), w_ref[k],
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sspnna_tiles(
+    feats: jax.Array,      # (T, dI, C)
+    local_idx: jax.Array,  # (T, dO, K)
+    weights: jax.Array,    # (K, C, N)
+    *,
+    block_n: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the SSpNNA kernel over a stack of tiles -> (T, dO, N)."""
+    t, d_i, c = feats.shape
+    _, d_o, k = local_idx.shape
+    n = weights.shape[2]
+    bn = block_n or n
+    assert n % bn == 0, (n, bn)
+    grid = (t, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_planes=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d_i, c), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d_o, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((k, c, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, d_o, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d_o, n), feats.dtype),
+        interpret=interpret,
+    )(feats, local_idx, weights)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+devices stand in for 2 pods x 256 chips. For each cell:
+
+    jit(step, in_shardings, out_shardings).lower(specs).compile()
+    -> memory_analysis()   (fits?)
+    -> cost_analysis()     (per-device flops / bytes)
+    -> HLO collective scan (collective bytes)  -> §Roofline terms
+
+Usage:
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod --out results.json
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.dist.hints import use_mesh
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_roofline
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.serving.engine import make_serve_step
+from repro.training.optimizer import OptHParams
+from repro.training.train_loop import init_train_state, make_train_step
+
+N_MICROBATCHES = 8  # train grad-accumulation steps (per-device micro <= 2)
+
+# Cumulative optimization variants for the SPerf hillclimb:
+#   v1: shard the grad accumulator like the params (RS instead of replicated AR)
+#   v2: v1 + bf16 online-softmax score traffic
+#   v3: v2 + 2 microbatches + bf16 grad accumulator
+#   v4: v3 + full-mesh DP (model axis -> data parallelism; small archs)
+#   v5: v1 + bf16 scores + 4 microbatches (memory-bounded MoE compromise)
+VARIANTS = ("baseline", "v1", "v2", "v3", "v4", "v5")
+
+
+def _train_lowered(cfg, mesh, specs, variant="baseline",
+                   n_micro=N_MICROBATCHES):
+    hp = OptHParams(moment_dtype=jnp.bfloat16)
+    rules = ShardingRules(cfg, mesh, full_dp=(variant == "v4"))
+    accum_dtype = jnp.float32
+    grad_sh = None
+    if variant in ("v2", "v3", "v4", "v5"):
+        cfg = dataclasses.replace(cfg, attn_dtype="bfloat16")
+    if variant == "v5":
+        n_micro = 4
+        accum_dtype = jnp.bfloat16
+    if variant == "v3":
+        n_micro = 2
+        accum_dtype = jnp.bfloat16
+    if variant == "v4":
+        # full-mesh DP: every device needs >= 1 batch row per microbatch
+        n_micro = 1
+        accum_dtype = jnp.bfloat16
+    state_specs = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, hp))
+    state_sh = rules.state_shardings(state_specs)
+    if variant in ("v1", "v2", "v3", "v5"):
+        grad_sh = rules.params_shardings(state_specs["params"])
+    batch_sh = rules.batch_shardings(specs["batch"])
+    step = make_train_step(cfg, hp, n_microbatches=n_micro,
+                           grad_shardings=grad_sh, accum_dtype=accum_dtype)
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jitted.lower(state_specs, specs["batch"])
+
+
+def _prefill_lowered(cfg, mesh, specs):
+    from repro.models.transformer import init_lm
+    from repro.serving.engine import make_prefill
+
+    rules = ShardingRules(cfg, mesh)
+    params_specs = jax.eval_shape(
+        lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    params_sh = rules.params_shardings(params_specs)
+    args = [specs["tokens"]]
+    arg_sh = [rules.batch_shardings(specs["tokens"])]
+    kw_names = []
+    for k in ("frontend_embeds", "enc_frames"):
+        if k in specs:
+            args.append(specs[k])
+            arg_sh.append(rules.batch_shardings(specs[k]))
+            kw_names.append(k)
+    fn = make_prefill(cfg)
+
+    def wrapped(params, tokens, *extra):
+        kw = dict(zip(kw_names, extra))
+        return fn(params, tokens, **kw)
+
+    jitted = jax.jit(wrapped, in_shardings=(params_sh, *arg_sh))
+    return jitted.lower(params_specs, *args)
+
+
+def _decode_lowered(cfg, mesh, specs):
+    from repro.models.transformer import init_lm
+
+    rules = ShardingRules(cfg, mesh)
+    params_specs = jax.eval_shape(
+        lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    params_sh = rules.params_shardings(params_specs)
+    cache_sh = rules.cache_shardings(specs["cache"])
+    tok_sh = rules.batch_shardings(specs["token"])
+    step = make_serve_step(cfg, moe_groups=1 if cfg.is_moe else None)
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_sh, tok_sh, cache_sh),
+        out_shardings=(None, None, cache_sh),
+        donate_argnums=(2,),
+    )
+    return jitted.lower(params_specs, specs["token"], specs["cache"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             compile_: bool = True, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "variant": variant}
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = why
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    t0 = time.time()
+    dp = (("pod", "data", "model") if variant == "v4"
+          else ("pod", "data"))
+    with use_mesh(mesh, dp=dp):
+        if spec.kind == "train":
+            lowered = _train_lowered(cfg, mesh, specs, variant)
+        elif spec.kind == "prefill":
+            lowered = _prefill_lowered(cfg, mesh, specs)
+        else:
+            lowered = _decode_lowered(cfg, mesh, specs)
+    result["lower_s"] = round(time.time() - t0, 1)
+    if not compile_:
+        result["status"] = "lowered"
+        return result
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_dev = mesh.size
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    result["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes_per_device": per_dev_bytes,
+        "fits_16GB": bool(per_dev_bytes < 16e9),
+    }
+    rf = build_roofline(arch, shape_name, mesh_name, n_dev, cost, hlo,
+                        cfg, spec)
+    result["roofline"] = rf.to_dict()
+    result["status"] = "ok"
+    print(f"[{arch} x {shape_name} x {mesh_name} x {variant}] "
+          f"compile={result['compile_s']}s "
+          f"mem/dev={per_dev_bytes/1e9:.2f}GB bound={rf.bound} "
+          f"terms(c/m/coll)=({rf.compute_s:.4f},{rf.memory_s:.4f},"
+          f"{rf.collective_s:.4f})s mfu={rf.mfu:.3f}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = run_cell(arch, shape, mp,
+                                 compile_=not args.no_compile,
+                                 variant=args.variant)
+                except Exception as e:  # a failing cell is a bug: record it
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                    print(f"[{arch} x {shape}] FAILED: {e}", flush=True)
+                results.append(r)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,421 @@
+"""Post-optimization HLO cost walker with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts every ``while`` body exactly once, which
+under-reports layer-scanned/microbatched modules by orders of magnitude
+(verified empirically — see tests). This walker parses the SPMD-partitioned
+HLO text and:
+
+  * multiplies while-body costs by the loop trip count (jax scans lower to
+    whiles whose condition compares the induction variable against a
+    constant — the max integer constant in the condition computation);
+  * counts dot FLOPs as 2 * |out| * prod(lhs contracting dims);
+  * counts HBM traffic as operand+output bytes of every top-level op
+    (fusions are the HBM<->VMEM units on TPU; their internals are free);
+  * accumulates collective bytes per kind (all-gather uses output bytes —
+    the gathered size; others use operand bytes), inside loops included.
+
+All numbers are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+# Type strings may contain /*index=N*/ comments (which include '='), so the
+# type group is a lazy match up to the first `opcode(` token.
+_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "domain", "opt-barrier",
+    # loop-carried copies are elided by buffer donation/aliasing on TPU
+    "copy", "copy-start", "copy-done",
+}
+
+# Pure-elementwise ops fuse into their producer/consumer on TPU: their
+# pass-through traffic is already accounted by the anchor ops' in+out bytes
+# (dot reads the fused chain's input, writes its output). Skipping them
+# models XLA:TPU fusion; the CPU backend leaves them unfused at top level.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "sqrt", "rsqrt", "cbrt", "power", "select", "compare", "and",
+    "or", "xor", "not", "convert", "broadcast", "reshape", "clamp", "sign",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "cosine",
+    "sine", "atan2", "is-finite", "reduce-precision", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "expm1",
+    "log1p", "logistic", "erf", "stochastic-convert", "real", "imag", "map",
+}
+
+_COLLECTIVES = {
+    "all-reduce": "all-reduce", "all-reduce-start": "all-reduce",
+    "all-gather": "all-gather", "all-gather-start": "all-gather",
+    "reduce-scatter": "reduce-scatter", "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+    "ragged-all-to-all": "all-to-all",
+}
+
+
+def _shape_dims(type_str: str):
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            yield dt, n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * n for dt, n in _shape_dims(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(n for _, n in _shape_dims(type_str))
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    def operand_names(self):
+        # `rest` starts *inside* the operand paren group (the opening paren
+        # was consumed by the instruction regex); read until it closes.
+        depth, cur = 1, []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            cur.append(ch)
+        return re.findall(r"%([\w\.\-]+)", "".join(cur))
+
+    def attr(self, key: str):
+        m = re.search(rf"{key}=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str):
+        m = re.search(rf"{key}=\{{([\d,\s]*)\}}", self.rest)
+        if not m:
+            return []
+        return [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: dict = field(default_factory=dict)
+    order: list = field(default_factory=list)
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1),
+                                  is_entry=line.strip().startswith("ENTRY"))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST.match(line)
+        if m:
+            inst = Instruction(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instructions[inst.name] = inst
+            cur.order.append(inst.name)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the condition computation (jax scan pattern)."""
+    best = 1
+    for name in cond.order:
+        inst = cond.instructions[name]
+        if inst.opcode == "constant":
+            m = re.match(r"([\d]+)\)?", inst.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    bytes_by_op: dict = field(default_factory=dict)
+    n_while: int = 0
+
+    def _badd(self, op: str, b: float):
+        self.bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0) + b
+
+    def add(self, other: "HloCost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0) + v * times
+        self.n_while += other.n_while * times
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, HloCost] = {}
+        self._anchor_memo: dict[str, bool] = {}
+        self._dus_memo: dict[str, bool] = {}
+        entries = [c for c in self.comps.values() if c.is_entry]
+        self.entry = entries[0] if entries else None
+
+    def cost(self) -> HloCost:
+        if self.entry is None:
+            return HloCost()
+        return self._comp_cost(self.entry.name)
+
+    def _has_anchor(self, name: str) -> bool:
+        """True if the computation contains any non-elementwise op."""
+        if name not in self._anchor_memo:
+            comp = self.comps.get(name)
+            self._anchor_memo[name] = False
+            if comp is not None:
+                for iname in comp.order:
+                    inst = comp.instructions[iname]
+                    if inst.opcode in _FREE_OPS or inst.opcode in _ELEMENTWISE:
+                        continue
+                    if inst.opcode == "fusion":
+                        callee = inst.attr("calls")
+                        if callee and self._has_anchor(callee):
+                            self._anchor_memo[name] = True
+                            break
+                        continue
+                    self._anchor_memo[name] = True
+                    break
+        return self._anchor_memo[name]
+
+    def _fusion_traffic(self, inst: Instruction, comp: Computation,
+                        callee: str) -> float:
+        """HBM traffic of a fusion, modelling TPU slice/update semantics.
+
+        An operand consumed *only* by dynamic-slice ops streams just the
+        sliced regions; an operand that is only a dynamic-update-slice base
+        aliases the output (in-place) and streams only the update region.
+        """
+        cc = self.comps[callee]
+        # parameter index -> parameter instruction name
+        params: dict[int, str] = {}
+        for iname in cc.order:
+            ci = cc.instructions[iname]
+            if ci.opcode == "parameter":
+                m = re.match(r"(\d+)", ci.rest)
+                if m:
+                    params[int(m.group(1))] = iname
+        direct: dict[str, list[Instruction]] = {}
+        for iname in cc.order:
+            ci = cc.instructions[iname]
+            for o in ci.operand_names():
+                direct.setdefault(o, []).append(ci)
+
+        _PASS = {"bitcast", "copy", "convert", "reshape"}
+
+        def effective(name, depth=0):
+            """[(consumer, via)] where `via` is the operand name that reaches
+            the consumer (tracks identity through pass-through unary ops)."""
+            out = []
+            for c in direct.get(name, []):
+                if c.opcode in _PASS and depth < 8:
+                    out.extend(effective(c.name, depth + 1))
+                else:
+                    out.append((c, name))
+            return out
+
+        consumers = {n: effective(n) for n in params.values()}
+        traffic = 0.0
+        operands = inst.operand_names()
+        dus_on_param = False
+        for i, oname in enumerate(operands):
+            if oname not in comp.instructions:
+                continue
+            ob = _type_bytes(comp.instructions[oname].type_str)
+            pname = params.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(c.opcode == "dynamic-slice" for c, _ in cons):
+                traffic += sum(_type_bytes(c.type_str) for c, _ in cons)
+            elif cons and all(
+                c.opcode == "dynamic-update-slice"
+                and (c.operand_names() or [None])[0] == via
+                for c, via in cons
+            ):
+                # aliased base: stream the update regions only
+                for c, _ in cons:
+                    ops2 = c.operand_names()
+                    if len(ops2) > 1 and ops2[1] in cc.instructions:
+                        traffic += 2 * _type_bytes(
+                            cc.instructions[ops2[1]].type_str)
+                dus_on_param = True
+            else:
+                traffic += ob
+        out_b = _type_bytes(inst.type_str)
+        if not dus_on_param:
+            traffic += out_b
+        return traffic
+
+    def _has_dus(self, name: str) -> bool:
+        if name not in self._dus_memo:
+            comp = self.comps.get(name)
+            found = False
+            if comp is not None:
+                for iname in comp.order:
+                    if comp.instructions[iname].opcode == "dynamic-update-slice":
+                        found = True
+                        break
+            self._dus_memo[name] = found
+        return self._dus_memo[name]
+
+    def _comp_cost(self, name: str) -> HloCost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = HloCost()
+        self._memo[name] = total  # guard recursion
+        if comp is None:
+            return total
+        for iname in comp.order:
+            inst = comp.instructions[iname]
+            op = inst.opcode
+            if op in _FREE_OPS or op in _ELEMENTWISE:
+                continue
+            if op == "fusion":
+                callee = inst.attr("calls")
+                # elementwise-only fusions are free at the HBM boundary too
+                if callee and not self._has_anchor(callee):
+                    continue
+            out_bytes = _type_bytes(inst.type_str)
+            in_bytes = sum(
+                _type_bytes(comp.instructions[o].type_str)
+                for o in inst.operand_names() if o in comp.instructions
+            )
+            if op in _COLLECTIVES:
+                kind = _COLLECTIVES[op]
+                b = out_bytes if kind == "all-gather" else in_bytes
+                total.coll_bytes[kind] = total.coll_bytes.get(kind, 0) + b
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                total._badd(kind, in_bytes + out_bytes)
+                continue
+            # slice-family ops touch only the sliced region on TPU (the big
+            # operand is NOT streamed): count in-place traffic.
+            if op in ("slice", "dynamic-slice"):
+                total._badd(op, 2 * out_bytes)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = inst.operand_names()
+                upd = comp.instructions.get(ops_[1]) if len(ops_) > 1 else None
+                ub = _type_bytes(upd.type_str) if upd is not None else out_bytes
+                total._badd(op, 2 * ub)
+                continue
+            if op == "gather":
+                ops_ = inst.operand_names()
+                idxb = (_type_bytes(comp.instructions[ops_[1]].type_str)
+                        if len(ops_) > 1 and ops_[1] in comp.instructions else 0)
+                total._badd(op, 2 * out_bytes + idxb)
+                continue
+            if op == "scatter":
+                ops_ = inst.operand_names()
+                upd_b = (_type_bytes(comp.instructions[ops_[2]].type_str)
+                         if len(ops_) > 2 and ops_[2] in comp.instructions else 0)
+                idx_b = (_type_bytes(comp.instructions[ops_[1]].type_str)
+                         if len(ops_) > 1 and ops_[1] in comp.instructions else 0)
+                total._badd(op, 3 * upd_b + idx_b)
+                callee = inst.attr("calls")
+                if callee and callee in self.comps:
+                    total.add(self._comp_cost(callee))
+                continue
+            if op == "while":
+                total.n_while += 1
+                body = inst.attr("body")
+                cond = inst.attr("condition")
+                m = re.search(r'known_trip_count[^\d]*(\d+)', inst.rest)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = _trip_count(self.comps[cond]) \
+                        if cond in self.comps else 1
+                sub = HloCost()
+                sub.add(self._comp_cost(body))
+                if cond in self.comps:
+                    sub.add(self._comp_cost(cond))
+                total.add(sub, times=max(trips, 1))
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w\.\-]+)", inst.rest.split("),", 1)[-1])
+                branch_costs = [self._comp_cost(b) for b in branches
+                                if b in self.comps]
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+                total._badd(op, in_bytes + out_bytes)
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "custom-call", "select-and-scatter"):
+                callee = inst.attr("calls")
+                if callee and callee in self.comps:
+                    total.add(self._comp_cost(callee))
+                if op == "fusion" and callee in self.comps:
+                    traffic = self._fusion_traffic(inst, comp, callee)
+                else:
+                    traffic = in_bytes + out_bytes
+                total._badd(op, traffic)
+                continue
+            if op == "dot":
+                ops_ = inst.operand_names()
+                lhs = comp.instructions.get(ops_[0]) if ops_ else None
+                k = 1
+                if lhs is not None:
+                    dims = list(_SHAPE_RE.findall(lhs.type_str))
+                    if dims:
+                        shape = [int(x) for x in dims[0][1].split(",") if x]
+                        for ci in inst.attr_list("lhs_contracting_dims"):
+                            if ci < len(shape):
+                                k *= shape[ci]
+                total.flops += 2.0 * _type_elems(inst.type_str) * k
+                total._badd(op, in_bytes + out_bytes)
+                continue
+            if op == "convolution":
+                # rare here; approximate via output elems * kernel volume
+                total.flops += 2.0 * _type_elems(inst.type_str)
+                total._badd(op, in_bytes + out_bytes)
+                continue
+            # default: bytes only
+            total._badd(op, in_bytes + out_bytes)
+        self._memo[name] = total
+        return total
+
+
+def analyze(text: str) -> HloCost:
+    return HloAnalyzer(text).cost()

@@ -1,0 +1,96 @@
+"""Assigned input-shape sets + ShapeDtypeStruct builders per (arch, shape).
+
+Shapes (assignment):
+    train_4k     seq 4,096   global_batch 256   (training)
+    prefill_32k  seq 32,768  global_batch 32    (inference prefill)
+    decode_32k   seq 32,768  global_batch 128   (decode: 1 new token, cache
+                                                 holds seq_len)
+    long_500k    seq 524,288 global_batch 1     (long-context decode;
+                                                 sub-quadratic archs only)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation ever happens for full-size configs; the dry-run lowers + compiles
+from specs alone. Decode caches place the last prompt token at the final
+slot (pos = seq_len - 1) so the one-token step writes inside the buffer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: long_500k requires "
+                       "sub-quadratic attention (DESIGN.md §5)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Training batch pytree specs (tokens carry the shifted target)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s + 1), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = _sds(
+            (b, cfg.n_frontend_tokens, cfg.d_model), cfg.jnp_dtype)
+    if cfg.is_encdec:
+        out["enc_frames"] = _sds((b, s, cfg.d_model), cfg.jnp_dtype)
+    return out
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = _sds(
+            (b, cfg.n_frontend_tokens, cfg.d_model), cfg.jnp_dtype)
+    if cfg.is_encdec:
+        out["enc_frames"] = _sds((b, s, cfg.d_model), cfg.jnp_dtype)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """token + cache specs via eval_shape over init_decode_cache."""
+    from repro.models.transformer import init_decode_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, b, s, src_len=s if cfg.is_encdec else 0)
+    )
+    # pos is a concrete scalar inside the pytree; normalize to a spec
+    cache = jax.tree.map(
+        lambda x: _sds(x.shape, x.dtype), cache)
+    return {"token": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,198 @@
+"""GQA attention: chunked online-softmax (train/prefill) + cached decode.
+
+Design constraints (DESIGN.md §6):
+* never materialize (Sq, Skv) scores — prefill_32k at full size would need
+  petabytes; instead a flash-style two-level loop: ``lax.map`` over q chunks,
+  ``lax.scan`` over kv chunks with running (max, sum, acc) in f32.
+* local (sliding-window) layers slice only the kv window each q chunk needs,
+  so SWA costs O(S * window), not O(S^2) masked.
+* logit softcapping (gemma-2) applied before the online max.
+* decode: single-token query against a ring (local) or linear (global)
+  cache; scores are (B, H, S_cache) — small, computed in one shot.
+
+Everything is pure jnp: GSPMD shards batch/heads; sequence-sharded variants
+are provided by ``repro.dist.sharding`` wrappers. A Pallas flash kernel with
+identical semantics lives in ``repro.kernels.flash``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, cap,
+                  acc_dtype=jnp.float32):
+    """One (q-chunk, kv-chunk) tile -> (scores-applied partial, m, l).
+
+    q: (B, Cq, Hkv, G, D); k/v: (B, Ckv, Hkv, D). Partials in acc_dtype —
+    bf16 halves the dominant HBM score traffic at ~1e-2 logit error
+    (EXPERIMENTS.md §Perf).
+    """
+    # emit scores directly in acc_dtype: with bf16 this halves the dominant
+    # HBM score traffic at the dot output itself (not just downstream)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=acc_dtype
+    )
+    s = s / jnp.sqrt(q.shape[-1]).astype(s.dtype)
+    s = _softcap(s, cap)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], jnp.asarray(s),
+                  jnp.asarray(NEG_INF, s.dtype))
+    m = jnp.max(s, axis=-1).astype(jnp.float32)  # (B,H,G,Cq) stats in f32
+    p = jnp.exp((s.astype(jnp.float32) - m[..., None])).astype(acc_dtype)
+    p = jnp.where(mask[None, None, None], p, jnp.asarray(0.0, acc_dtype))
+    l = jnp.sum(p.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def chunked_attention(
+    q: jax.Array,             # (B, Sq, Hq, D)
+    k: jax.Array,             # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Flash-style attention; O(Sq*(window|Skv)) compute, O(chunk^2) memory."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    n_q = sq // q_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+
+    local = window is not None and window + q_chunk < skv
+    if local:
+        # only the kv span [q_start - window, q_end) can be unmasked
+        span = window + q_chunk
+        span = ((span + kv_chunk - 1) // kv_chunk) * kv_chunk
+
+    def do_q_chunk(qi):
+        q_start = qi * q_chunk
+        q_pos = q_offset + q_start + jnp.arange(q_chunk)
+        qc = jax.lax.dynamic_slice_in_dim(qg, q_start, q_chunk, axis=1)
+        if local:
+            k_start = jnp.clip(q_offset + q_start + q_chunk - span, 0, skv - span)
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, span, axis=1)
+            k_pos = k_start + jnp.arange(span)
+            o, m, l = _chunk_attend(qc, kc, vc, q_pos, k_pos, True, window,
+                                    logit_cap, acc_dtype)
+            out = o / jnp.maximum(l[..., None], 1e-30)
+        else:
+            n_kv = skv // kv_chunk
+
+            def body(carry, ki):
+                m_run, l_run, acc = carry
+                k_start = ki * kv_chunk
+                kc = jax.lax.dynamic_slice_in_dim(k, k_start, kv_chunk, axis=1)
+                vc = jax.lax.dynamic_slice_in_dim(v, k_start, kv_chunk, axis=1)
+                k_pos = k_start + jnp.arange(kv_chunk)
+                o, m, l = _chunk_attend(
+                    qc, kc, vc, q_pos, k_pos, causal, window, logit_cap,
+                    acc_dtype,
+                )
+                m_new = jnp.maximum(m_run, m)
+                a = jnp.exp(m_run - m_new)
+                bcoef = jnp.exp(m - m_new)
+                l_new = l_run * a + l * bcoef
+                acc = acc * a[..., None] + o * bcoef[..., None]
+                return (m_new, l_new, acc), None
+
+            m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+            a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+            (m_f, l_f, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(n_kv)
+            )
+            out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return out  # (B, Hkv, G, Cq, D)
+
+    outs = jax.lax.map(do_q_chunk, jnp.arange(n_q))  # (n_q, B, Hkv, G, Cq, D)
+    out = jnp.moveaxis(outs, 0, 3)  # (B, Hkv, G, n_q, Cq, D)
+    out = out.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Per-layer stack of caches. ``k``/``v``: (L, B, S_buf, Hkv, D);
+    for local layers S_buf == window (ring addressing)."""
+
+    k: jax.Array
+    v: jax.Array
+
+    @property
+    def buf_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(n_layers, batch, buf_len, n_kv, head_dim, dtype) -> KVCache:
+    shape = (n_layers, batch, buf_len, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_update_decode(cache_k, cache_v, k_new, v_new, t, ring: bool):
+    """Insert one token at position t (ring: t % buf)."""
+    buf = cache_k.shape[1]
+    slot = (t % buf) if ring else t
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    return ck, cv
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, D)
+    cache_k: jax.Array,  # (B, S_buf, Hkv, D) — already includes token t
+    cache_v: jax.Array,
+    t,                   # current position (token t is at slot t or t%buf)
+    *,
+    ring: bool,
+    window: int | None = None,
+    logit_cap: float | None = None,
+) -> jax.Array:
+    b, sbuf, hkv, d = cache_k.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg[:, 0], cache_k, preferred_element_type=jnp.float32
+    )
+    s = s / jnp.sqrt(d).astype(jnp.float32)
+    s = _softcap(s, logit_cap)
+    slots = jnp.arange(sbuf)
+    if ring:
+        # slot holds position: p = t - ((t - slot) mod buf); valid if p >= 0
+        pos = t - ((t - slots) % sbuf)
+    else:
+        pos = slots
+    valid = (pos >= 0) & (pos <= t)
+    if window is not None:
+        valid &= pos > t - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, cache_v, preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,52 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU-MLP + RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = split_keys(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    if act == "gelu":
+        return {
+            "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    if act == "rwkv_cm":
+        return {
+            "w_k": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_v": dense_init(ks[1], (d_ff, d_model), dtype),
+            "w_r": dense_init(ks[2], (d_model, d_model), dtype),
+            "mu_k": jnp.zeros((d_model,), dtype),
+            "mu_r": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(act)
+
+
+def apply_mlp(params, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    if act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    if act == "gelu":
+        return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+    raise ValueError(act)
+
+
+def apply_rwkv_channel_mix(params, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """RWKV channel-mix with token shift. x/x_prev: (B, S, d) where x_prev is
+    x shifted right by one (x_{t-1})."""
+    xk = x + (x_prev - x) * params["mu_k"]
+    xr = x + (x_prev - x) * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])

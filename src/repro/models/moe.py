@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer with COIR-style dispatch + SPADE capacity.
+
+Expert-parallel layout (DESIGN.md §4): tokens are organized in *groups* (one
+per data shard — the batch axis), experts shard over the model axis. Because
+activations are replicated across the model axis, each device can gather its
+own experts' tokens group-locally — dispatch needs **no explicit collective**
+(the a2a variant lives in ``repro.dist.collectives`` as a hillclimb option).
+
+The dispatch table is the MoE instance of the paper's metadata structure
+(``repro.core.moe_spade.build_dispatch``), and the capacity is planned with
+the paper's RST quantile rule instead of a fixed factor.
+
+Load-balance aux loss + router z-loss included (production training).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moe_spade import build_dispatch
+from repro.dist.hints import DP, constrain
+from repro.models.common import dense_init, split_keys
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str, dtype):
+    ks = split_keys(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_up": dense_init(ks[2], (n_experts, d_model, d_ff), dtype),
+        "w_down": dense_init(ks[3], (n_experts, d_ff, d_model), dtype),
+    }
+    if act == "gelu":
+        del p["w_gate"]
+    return p
+
+
+def moe_capacity(tokens_per_group: int, top_k: int, n_experts: int,
+                 capacity_factor: float, round_to: int = 4) -> int:
+    cap = int(tokens_per_group * top_k * capacity_factor / n_experts) + 1
+    return max((cap + round_to - 1) // round_to * round_to, round_to)
+
+
+def apply_moe(params, x: jax.Array, *, top_k: int, capacity: int, act: str):
+    """x: (G, Tg, d) -> (out (G, Tg, d), aux dict).
+
+    G = token groups (== data shards), Tg tokens per group.
+    """
+    g_, tg, d = x.shape
+    n_experts = params["router"].shape[1]
+    logits = (x.astype(jnp.float32) @ params["router"])  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)              # (G, Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # COIR-style dispatch metadata per group.
+    slot, table = jax.vmap(
+        lambda ii: build_dispatch(ii, n_experts, capacity)
+    )(idx.astype(jnp.int32))
+    # slot: (G, Tg, k); table: (G, E, cap)
+
+    tok_ok = table >= 0
+    gather_idx = jnp.maximum(table, 0)                    # (G, E, cap)
+    xin = jnp.take_along_axis(
+        x[:, None], gather_idx[..., None], axis=2
+    )  # x (G,1,Tg,d) gathered along Tg by (G,E,cap,1) -> (G,E,cap,d)
+    xin = jnp.where(tok_ok[..., None], xin, 0)
+    xin = constrain(xin, DP, "model", None, None)  # EP: experts on model
+
+    if act in ("swiglu", "geglu"):
+        a = jnp.einsum("gecd,edf->gecf", xin, params["w_gate"],
+                       preferred_element_type=jnp.float32)
+        b = jnp.einsum("gecd,edf->gecf", xin, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        inner = (jax.nn.silu(a) if act == "swiglu" else jax.nn.gelu(a)) * b
+    else:
+        inner = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", xin, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        )
+    h = jnp.einsum("gecf,efd->gecd", inner.astype(x.dtype), params["w_down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # Combine: per assignment j, token t reads h[idx[t,j], slot[t,j]].
+    h = constrain(h, DP, "model", None, None)
+    flat = h.reshape(g_, n_experts * capacity, d)
+    lin = idx * capacity + jnp.maximum(slot, 0)           # (G, Tg, k)
+    picked = jnp.take_along_axis(
+        flat[:, None], lin.transpose(0, 2, 1)[..., None], axis=2
+    )  # flat (G,1,EC,d) by (G,k,Tg,1) -> (G,k,Tg,d)
+    picked = jnp.where((slot >= 0).transpose(0, 2, 1)[..., None], picked, 0)
+    out = jnp.einsum("gktd,gtk->gtd", picked.astype(jnp.float32),
+                     gates.astype(jnp.float32)).astype(x.dtype)
+
+    # aux losses (Switch): load-balance + router z-loss
+    me = probs.mean(axis=1)                               # (G, E)
+    onehot = jax.nn.one_hot(idx[..., 0], n_experts)
+    ce = onehot.mean(axis=1)
+    lb_loss = n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = jnp.mean((slot < 0).astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_dropped": dropped,
+           "expert_load": onehot.sum(axis=(0, 1))}
+    return out, aux

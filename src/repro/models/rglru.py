@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block:  x -> {linear -> conv1d(width) -> RG-LRU} ⊙ {linear -> GeLU} -> linear
+
+RG-LRU:
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    log a_t = -c * r_t * softplus(Λ)  (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the linear recurrence with
+``lax.associative_scan`` (log-depth, O(T r) memory); decode is one step.
+The depthwise causal conv keeps a (width-1)-token state for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, r_dim: int, conv_width: int, dtype):
+    ks = split_keys(key, 6)
+    return {
+        "w_in_x": dense_init(ks[0], (d_model, r_dim), dtype),
+        "w_in_gate": dense_init(ks[1], (d_model, r_dim), dtype),
+        "w_out": dense_init(ks[2], (r_dim, d_model), dtype),
+        "conv_w": dense_init(ks[3], (conv_width, r_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((r_dim,), dtype),
+        "w_a": dense_init(ks[4], (r_dim, r_dim), jnp.float32),
+        "w_x": dense_init(ks[5], (r_dim, r_dim), jnp.float32),
+        # Λ init so a ~ U(0.9, 0.999)-ish at r=0.5 (Griffin appendix)
+        "lam": jnp.linspace(2.0, 5.0, r_dim, dtype=jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, T, r); w: (W, r); state: (B, W-1, r)."""
+    width = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], width - 1, x.shape[2]), x.dtype
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[width - 1 - i] for i in range(width)
+    ) + b
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return out, new_state
+
+
+def _rglru_gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_scan(p, x, h0):
+    """x: (B, T, r) -> (y (B, T, r) f32, h_last). Linear recurrence via
+    associative scan: h_t = a_t h_{t-1} + b_t."""
+    a, bterm = _rglru_gates(p, x)
+    # seed carry-in state through the first element
+    bterm = bterm.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p, x, h):
+    """x: (B, r) one token; h: (B, r)."""
+    a, bterm = _rglru_gates(p, x[:, None])
+    h_new = a[:, 0] * h.astype(jnp.float32) + bterm[:, 0]
+    return h_new, h_new
+
+
+def apply_rglru_block(p, x, state):
+    """x: (B, T, d); state: {"h": (B, r) f32, "conv": (B, W-1, r)}.
+    Returns (out (B, T, d), new_state)."""
+    u = x @ p["w_in_x"]
+    gate = jax.nn.gelu(x @ p["w_in_gate"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    y, h_last = rglru_scan(p, u, state["h"])
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def apply_rglru_block_decode(p, x, state):
+    """x: (B, 1, d)."""
+    u = x @ p["w_in_x"]
+    gate = jax.nn.gelu(x @ p["w_in_gate"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    y, h_last = rglru_step(p, u[:, 0], state["h"])
+    out = (y[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}

@@ -1,0 +1,155 @@
+"""RWKV-6 (Finch) time-mix with data-dependent decay — chunked linear attn.
+
+Recurrence per head (state S in R^{D x D}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with per-(token, channel) decay w_t = exp(-exp(w0 + lora(x_shift-mix)))
+(the RWKV-6 novelty) and per-head bonus u.
+
+Training/prefill uses the *chunked* formulation (the linear-attention
+analogue of SPADE tiling — see DESIGN.md §5): within a chunk of length L the
+pairwise decay exponents la_{t-1} - la_s (s <= t-1) are always <= 0, so the
+direct masked computation is numerically stable (only graceful underflow);
+across chunks a small f32 state is carried by ``lax.scan``. Decode is the
+one-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def init_time_mix(key, d_model: int, n_heads: int, head_dim: int, dtype,
+                  lora_rank: int = 64):
+    ks = split_keys(key, 8)
+    return {
+        "w_r": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "w_k": dense_init(ks[1], (d_model, n_heads * head_dim), dtype),
+        "w_v": dense_init(ks[2], (d_model, n_heads * head_dim), dtype),
+        "w_g": dense_init(ks[3], (d_model, n_heads * head_dim), dtype),
+        "w_o": dense_init(ks[4], (n_heads * head_dim, d_model), dtype),
+        "mu": jnp.zeros((5, d_model), dtype),            # r,k,v,g,w shift-mix
+        "w0": jnp.full((n_heads * head_dim,), -1.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], (d_model, lora_rank), jnp.float32),
+        "w_lora_b": dense_init(ks[6], (lora_rank, n_heads * head_dim),
+                               jnp.float32, scale=0.1),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),  # bonus
+        "ln_x_scale": jnp.ones((n_heads * head_dim,), jnp.float32),
+        "ln_x_bias": jnp.zeros((n_heads * head_dim,), jnp.float32),
+    }
+
+
+def _group_norm_heads(x, scale, bias, n_heads, eps=64e-5):
+    """Per-head LayerNorm of the wkv output (RWKV's ln_x)."""
+    b, t, hd = x.shape
+    xh = x.reshape(b, t, n_heads, hd // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(b, t, hd)
+    return y * scale + bias
+
+
+def chunked_wkv(r, k, v, logw, u, s0, chunk: int):
+    """r/k/v/logw: (B, T, H, D); u: (H, D); s0: (B, H, D, D) f32.
+
+    Returns (o (B, T, H, D) f32, s_final). logw = log(decay) <= 0.
+    """
+    b, t, h, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)  # (nc,B,H,L,D)
+
+    r_, k_, v_ = (to_chunks(x.astype(jnp.float32)) for x in (r, k, v))
+    lw = to_chunks(logw.astype(jnp.float32))
+    la = jnp.cumsum(lw, axis=3)         # inclusive within chunk
+    lap = la - lw                       # la_{t-1} (exclusive)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # s < t
+
+    def body(s, xs):
+        rc, kc, vc, lac, lapc, lwc = xs  # (B,H,L,D)
+        # inter-chunk: o += (r ⊙ exp(la_{t-1})) @ S
+        qt = rc * jnp.exp(lapc)
+        o = jnp.einsum("bhld,bhde->bhle", qt, s)
+        # intra-chunk, strictly-lower scores (exponent <= 0 -> stable)
+        expo = jnp.exp(lapc[:, :, :, None, :] - lac[:, :, None, :, :])
+        score = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, expo)
+        score = jnp.where(tri[None, None], score, 0.0)
+        o = o + jnp.einsum("bhts,bhse->bhte", score, vc)
+        # diagonal bonus term
+        dscore = jnp.einsum("bhtd,bhtd->bht", rc * u[None, :, None, :], kc)
+        o = o + dscore[..., None] * vc
+        # state: S' = diag(exp(la_L)) S + sum_s (k_s ⊙ exp(la_L - la_s)) v_s^T
+        la_l = lac[:, :, -1:, :]
+        kd = kc * jnp.exp(la_l - lac)
+        s_new = jnp.exp(la_l.squeeze(2))[..., None] * s + jnp.einsum(
+            "bhsd,bhse->bhde", kd, vc
+        )
+        return s_new, o
+
+    s_fin, os = jax.lax.scan(body, s0.astype(jnp.float32), (r_, k_, v_, la, lap, lw))
+    o = os.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d)
+    return o, s_fin
+
+
+def wkv_decode_step(r, k, v, logw, u, s):
+    """Single-token recurrence. r/k/v/logw: (B, H, D); s: (B, H, D, D)."""
+    r, k, v, logw = (x.astype(jnp.float32) for x in (r, k, v, logw))
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    o = jnp.einsum("bhd,bhde->bhe", r, s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw)[..., None] * s + kv
+    return o, s_new
+
+
+def apply_time_mix(params, x, x_prev, s0, *, n_heads: int, chunk: int = 64):
+    """x: (B, T, d); x_prev: (B, d) (token before the window, zeros at t=0).
+    Returns (out (B, T, d), (last_x (B, d), s_final))."""
+    b, t, d = x.shape
+    hd = params["w_r"].shape[1]
+    head_dim = hd // n_heads
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mu = params["mu"]
+    mixes = [x + (shifted - x) * mu[i] for i in range(5)]
+    xr, xk, xv, xg, xw = mixes
+    r = (xr @ params["w_r"]).reshape(b, t, n_heads, head_dim)
+    k = (xk @ params["w_k"]).reshape(b, t, n_heads, head_dim)
+    v = (xv @ params["w_v"]).reshape(b, t, n_heads, head_dim)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay (RWKV-6): log w in (-inf, 0)
+    w_raw = params["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["w_lora_a"]
+    ) @ params["w_lora_b"]
+    logw = -jnp.exp(w_raw).reshape(b, t, n_heads, head_dim)
+    o, s_fin = chunked_wkv(r, k, v, logw, params["u"], s0, min(chunk, t))
+    o = _group_norm_heads(o.reshape(b, t, hd), params["ln_x_scale"],
+                          params["ln_x_bias"], n_heads)
+    out = (o * g.astype(jnp.float32)).astype(x.dtype) @ params["w_o"]
+    return out, (x[:, -1], s_fin)
+
+
+def apply_time_mix_decode(params, x, x_prev, s, *, n_heads: int):
+    """x: (B, 1, d) single token. Returns (out, (x (B,d), s'))."""
+    b, _, d = x.shape
+    hd = params["w_r"].shape[1]
+    head_dim = hd // n_heads
+    xt = x[:, 0]
+    mu = params["mu"]
+    mixes = [xt + (x_prev - xt) * mu[i] for i in range(5)]
+    xr, xk, xv, xg, xw = mixes
+    r = (xr @ params["w_r"]).reshape(b, n_heads, head_dim)
+    k = (xk @ params["w_k"]).reshape(b, n_heads, head_dim)
+    v = (xv @ params["w_v"]).reshape(b, n_heads, head_dim)
+    g = jax.nn.silu(xg @ params["w_g"])
+    w_raw = params["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["w_lora_a"]
+    ) @ params["w_lora_b"]
+    logw = -jnp.exp(w_raw).reshape(b, n_heads, head_dim)
+    o, s_new = wkv_decode_step(r, k, v, logw, params["u"], s)
+    o = _group_norm_heads(o.reshape(b, 1, hd), params["ln_x_scale"],
+                          params["ln_x_bias"], n_heads)
+    out = (o * g[:, None].astype(jnp.float32)).astype(x.dtype) @ params["w_o"]
+    return out, (xt, s_new)

@@ -1,0 +1,176 @@
+"""SCN U-Net: submanifold sparse conv network for 3D semantic segmentation.
+
+The paper's primary workload (Graham et al. 2018 [18]): a U-net over a
+sparse voxel grid — submanifold 3^3 conv blocks at each level, 2^3-stride-2
+convs down, transposed convs back up with skip concatenation, and a linear
+classifier over active voxels.
+
+Metadata (COIR per level + level active sets) is built once per input by
+``build_unet_metadata`` — the AdMAC pass — and reused by every conv at that
+level, which is exactly the paper's motivation for amortizing adjacency
+construction. ``apply_unet`` is a pure jittable function of (params, feats,
+metadata).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coir import COIR
+from repro.core.hashgrid import downsample_coords, kernel_offsets
+from repro.core.sparse_conv import (
+    SparseConvParams,
+    init_sparse_conv,
+    sparse_conv_cirf,
+    submanifold_coir,
+    transposed_coir,
+)
+from repro.core import coir as coir_lib
+from repro.sparse.tensor import SparseVoxelTensor
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    name: str = "scn_unet"
+    in_channels: int = 4
+    n_classes: int = 20
+    widths: tuple[int, ...] = (16, 32, 48, 64)
+    reps: int = 2
+    resolution: int = 64
+    capacity: int = 8192
+    dtype: Any = jnp.float32
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.widths)
+
+
+class LevelMeta(NamedTuple):
+    coords: jax.Array
+    mask: jax.Array
+    sub_coir: COIR          # submanifold 3^3 metadata at this level
+    down_coir: COIR | None  # strided 2^3 s2 conv to the next level
+    up_coir: COIR | None    # transposed conv back to this level
+
+
+def build_unet_metadata(t: SparseVoxelTensor, cfg: UNetConfig) -> list[LevelMeta]:
+    """One AdMAC pass per level: active sets + all COIR blocks."""
+    levels: list[LevelMeta] = []
+    coords, mask = t.coords, t.mask
+    res = cfg.resolution
+    offs2 = jnp.asarray(kernel_offsets(2, centered=False))
+    for li in range(cfg.n_levels):
+        cur = SparseVoxelTensor(coords, jnp.zeros((coords.shape[0], 1)), mask)
+        sub = submanifold_coir(cur, res, 3)
+        down = up = None
+        if li < cfg.n_levels - 1:
+            dn_coords, dn_mask = downsample_coords(coords, mask, res, 2)
+            down = coir_lib.build_cirf(
+                dn_coords, dn_mask, coords, mask, offs2, res, stride=2
+            )
+            coarse = SparseVoxelTensor(
+                dn_coords, jnp.zeros((dn_coords.shape[0], 1)), dn_mask
+            )
+            up = transposed_coir(coarse, coords, mask, res, 2, 2)
+            levels.append(LevelMeta(coords, mask, sub, down, up))
+            coords, mask, res = dn_coords, dn_mask, res // 2
+        else:
+            levels.append(LevelMeta(coords, mask, sub, None, None))
+    return levels
+
+
+def init_unet(key: jax.Array, cfg: UNetConfig) -> dict:
+    keys = iter(jax.random.split(key, 1024))
+    w = cfg.widths
+    params: dict = {"levels": []}
+    params["stem"] = init_sparse_conv(next(keys), 27, cfg.in_channels, w[0], cfg.dtype)
+    for li in range(cfg.n_levels):
+        lvl = {
+            "enc": [
+                _block_params(next(keys), w[li], w[li], cfg.dtype)
+                for _ in range(cfg.reps)
+            ]
+        }
+        if li < cfg.n_levels - 1:
+            lvl["down"] = init_sparse_conv(next(keys), 8, w[li], w[li + 1], cfg.dtype)
+            lvl["up"] = init_sparse_conv(next(keys), 8, w[li + 1], w[li], cfg.dtype)
+            # decoder blocks see concat(skip, upsampled) = 2*w[li]
+            lvl["dec"] = [
+                _block_params(next(keys), 2 * w[li] if r == 0 else w[li], w[li], cfg.dtype)
+                for r in range(cfg.reps)
+            ]
+        params["levels"].append(lvl)
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (w[0], cfg.n_classes), cfg.dtype)
+        / np.sqrt(w[0]),
+        "b": jnp.zeros((cfg.n_classes,), cfg.dtype),
+    }
+    return params
+
+
+def _block_params(key, c_in, c_out, dtype):
+    k1, _ = jax.random.split(key)
+    return {
+        "conv": init_sparse_conv(k1, 27, c_in, c_out, dtype),
+        "bn_scale": jnp.ones((c_out,), dtype),
+        "bn_offset": jnp.zeros((c_out,), dtype),
+    }
+
+
+def _bn_relu(x, mask, scale, offset, eps=1e-5):
+    m = mask[:, None].astype(x.dtype)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(x * m, axis=0) / n
+    var = jnp.sum(jnp.square(x - mean) * m, axis=0) / n
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * scale + offset
+    return jax.nn.relu(y) * m
+
+
+def _block(x, mask, coir, p):
+    y = sparse_conv_cirf(x, coir, p["conv"])
+    return _bn_relu(y, mask, p["bn_scale"], p["bn_offset"])
+
+
+def apply_unet(params: dict, feats: jax.Array, meta: list[LevelMeta]) -> jax.Array:
+    """-> (V, n_classes) logits on the level-0 active set."""
+    x = sparse_conv_cirf(feats, meta[0].sub_coir, params["stem"])
+    skips = []
+    for li, lvl in enumerate(meta):
+        p = params["levels"][li]
+        for blk in p["enc"]:
+            x = _block(x, lvl.mask, lvl.sub_coir, blk)
+        if lvl.down_coir is not None:
+            skips.append(x)
+            x = sparse_conv_cirf(x, lvl.down_coir, p["down"])
+    for li in range(len(meta) - 2, -1, -1):
+        lvl, p = meta[li], params["levels"][li]
+        up = sparse_conv_cirf(x, lvl.up_coir, p["up"])
+        x = jnp.concatenate([skips[li], up], axis=-1)
+        for blk in p["dec"]:
+            x = _block(x, lvl.mask, lvl.sub_coir, blk)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def segmentation_loss(logits, labels, mask):
+    """Masked mean CE over active voxels + accuracy/mIoU-ready predictions."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    m = mask.astype(jnp.float32)
+    loss = -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * m) / jnp.maximum(jnp.sum(m), 1)
+    return loss, acc
+
+
+def miou(pred: np.ndarray, labels: np.ndarray, mask: np.ndarray, n_classes: int) -> float:
+    pred, labels = np.asarray(pred)[mask], np.asarray(labels)[mask]
+    ious = []
+    for c in range(n_classes):
+        inter = np.sum((pred == c) & (labels == c))
+        union = np.sum((pred == c) | (labels == c))
+        if union:
+            ious.append(inter / union)
+    return float(np.mean(ious)) if ious else 0.0

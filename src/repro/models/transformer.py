@@ -1,0 +1,488 @@
+"""Unified LM: decoder-only / enc-dec / hybrid assembly from ModelConfig.
+
+Layers are grouped into *cycles* (one full ``attn_pattern`` repetition) and
+scanned with stacked parameters — one compiled layer body regardless of
+depth, which bounds HLO size and compile time for the 40-cell dry-run.
+``n_layers % cycle`` remainder layers are unrolled.
+
+Three modes share one layer implementation:
+  * train:   full-sequence forward, no cache, optional remat;
+  * prefill: full-sequence forward that also emits the per-layer cache;
+  * decode:  one-token step consuming + updating the cache.
+
+Caches are plain pytrees shaped (n_cycles, ...) per cycle position so the
+decode scan zips (params, cache) together. KV caches are stored at the true
+kv-head count; TP for archs whose heads don't divide the model axis is done
+by sharding the cache *length* axis instead (flash-decoding style — GSPMD
+turns the softmax reductions into the 2-stage psum automatically). See
+DESIGN.md §5/§6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL, LOCAL, RGLRU, RWKV, ModelConfig
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.attention import (
+    chunked_attention,
+    decode_attention,
+)
+from repro.dist.hints import DP, constrain
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap, split_keys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    ks = split_keys(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+
+
+def _init_ffn(key, cfg: ModelConfig, layer_idx: int, dtype):
+    if cfg.is_moe and layer_idx % cfg.moe.moe_layer_period == 0:
+        return {"moe": moe_lib.init_moe(
+            key, cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.act, dtype)}
+    return {"mlp": mlp_lib.init_mlp(key, cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, layer_idx: int,
+                cross: bool, dtype):
+    ks = split_keys(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": jnp.ones((d,), dtype)}
+    if kind in (GLOBAL, LOCAL):
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif kind == RWKV:
+        p["tm"] = rwkv_lib.init_time_mix(
+            ks[0], d, cfg.n_heads, cfg.rwkv_head_dim, dtype)
+    elif kind == RGLRU:
+        p["rec"] = rglru_lib.init_rglru_block(
+            ks[0], d, cfg.rglru_dim or d, cfg.conv1d_width, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = jnp.ones((d,), dtype)
+        p["cross"] = _init_attn(ks[1], cfg, dtype)
+    p["ln2"] = jnp.ones((d,), dtype)
+    if kind == RWKV:
+        p["cm"] = mlp_lib.init_mlp(ks[2], d, cfg.d_ff, "rwkv_cm", dtype)
+    else:
+        p.update(_init_ffn(ks[2], cfg, layer_idx, dtype))
+    return p
+
+
+def _cycle_split(cfg: ModelConfig) -> tuple[int, int, int]:
+    cycle = len(cfg.attn_pattern)
+    return cycle, cfg.n_layers // cycle, cfg.n_layers % cycle
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    dtype = cfg.jnp_dtype
+    ks = split_keys(key, 8)
+    cycle, n_cycles, rem = _cycle_split(cfg)
+    params: dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab_padded, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_padded), dtype)
+
+    def stack_layers(key, n, kinds, base_idx, cross):
+        cols = []
+        for j, kind in enumerate(kinds):
+            keys = split_keys(jax.random.fold_in(key, j), max(n, 1))
+            per = [
+                _init_layer(keys[i], cfg, kind, base_idx + i * len(kinds) + j,
+                            cross, dtype)
+                for i in range(n)
+            ]
+            cols.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        return cols
+
+    cross = cfg.is_encdec
+    params["cycles"] = stack_layers(ks[2], n_cycles, cfg.attn_pattern, 0, cross)
+    params["rem"] = [
+        _init_layer(jax.random.fold_in(ks[3], j), cfg,
+                    cfg.layer_kind(n_cycles * cycle + j),
+                    n_cycles * cycle + j, cross, dtype)
+        for j in range(rem)
+    ]
+    if cfg.is_encdec:
+        enc = {
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+            "cycles": stack_layers(ks[4], cfg.encoder_layers, (GLOBAL,), 0, False),
+            "rem": [],
+        }
+        params["encoder"] = enc
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by all modes)
+# ---------------------------------------------------------------------------
+
+def _attn_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _self_attention(p, x, cfg: ModelConfig, kind: str, mode: str,
+                    cache, pos, causal=True, cache_pad=0):
+    b, s, _ = x.shape
+    window = cfg.window if kind == LOCAL else None
+    if mode == "decode":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = _attn_qkv(p, x, cfg, positions)
+        ring = kind == LOCAL
+        ck, cv = cache["k"], cache["v"]
+        from repro.models.attention import cache_update_decode
+
+        ck, cv = cache_update_decode(ck, cv, k.astype(ck.dtype),
+                                     v.astype(cv.dtype), pos, ring)
+        o = decode_attention(q, ck, cv, pos, ring=ring, window=window,
+                             logit_cap=cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, k, v = _attn_qkv(p, x, cfg, positions)
+        o = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            logit_cap=cfg.attn_softcap,
+            q_chunk=min(512, s), kv_chunk=min(512, s),
+            acc_dtype=jnp.dtype(cfg.attn_dtype),
+        )
+        new_cache = None
+        if mode == "prefill":
+            if kind == LOCAL and s >= cfg.window:
+                # ring addressing: position p lives at slot p % window
+                shift = (s - cfg.window) % cfg.window
+                new_cache = {
+                    "k": jnp.roll(k[:, -cfg.window:], shift, axis=1),
+                    "v": jnp.roll(v[:, -cfg.window:], shift, axis=1),
+                }
+            else:
+                pad = [(0, 0), (0, cache_pad), (0, 0), (0, 0)]
+                new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    out = o.reshape(b, o.shape[1], -1) @ p["wo"]
+    return out, new_cache
+
+
+def _cross_attention(p, x, enc_out, cfg: ModelConfig, mode, cache):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if mode == "decode":
+        k, v = cache["ck"], cache["cv"]
+        new_cache = cache
+        o = decode_attention(q, k, v, k.shape[1] - 1, ring=False, window=None)
+    else:
+        se = enc_out.shape[1]
+        k = (enc_out @ p["wk"]).reshape(b, se, cfg.n_kv_heads, hd)
+        v = (enc_out @ p["wv"]).reshape(b, se, cfg.n_kv_heads, hd)
+        o = chunked_attention(q, k, v, causal=False,
+                              q_chunk=min(512, s), kv_chunk=min(512, se))
+        new_cache = {"ck": k, "cv": v} if mode == "prefill" else None
+    return o.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def _ffn(p, x, cfg: ModelConfig, moe_groups: int | None):
+    aux = {}
+    if "moe" in p:
+        b, s, d = x.shape
+        g = moe_groups or b
+        xg = x.reshape(g, (b * s) // g, d)
+        cap = moe_lib.moe_capacity((b * s) // g, cfg.moe.top_k,
+                                   cfg.moe.n_experts, cfg.moe.capacity_factor)
+        y, aux = moe_lib.apply_moe(p["moe"], xg, top_k=cfg.moe.top_k,
+                                   capacity=cap, act=cfg.act)
+        return y.reshape(b, s, d), aux
+    return mlp_lib.apply_mlp(p["mlp"], x, cfg.act), aux
+
+
+def apply_layer(p, x, kind: str, cfg: ModelConfig, mode: str,
+                cache=None, pos=0, enc_out=None, causal=True,
+                moe_groups: int | None = None, cache_pad=0):
+    """Returns (x, new_cache, aux)."""
+    new_cache: dict[str, Any] = {}
+    aux = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (GLOBAL, LOCAL):
+        o, c = _self_attention(p["attn"], h, cfg, kind, mode,
+                               cache.get("attn") if cache else None, pos, causal,
+                               cache_pad)
+        if c is not None:
+            new_cache["attn"] = c
+    elif kind == RWKV:
+        st = cache["rwkv"] if cache else None
+        if mode == "decode":
+            o, (xprev, s_new) = rwkv_lib.apply_time_mix_decode(
+                p["tm"], h, st["x_tm"], st["s"], n_heads=cfg.n_heads)
+        else:
+            b = h.shape[0]
+            hd = cfg.n_heads * cfg.rwkv_head_dim
+            s0 = (st["s"] if st else
+                  jnp.zeros((b, cfg.n_heads, cfg.rwkv_head_dim,
+                             cfg.rwkv_head_dim), jnp.float32))
+            xp = st["x_tm"] if st else jnp.zeros_like(h[:, 0])
+            o, (xprev, s_new) = rwkv_lib.apply_time_mix(
+                p["tm"], h, xp, s0, n_heads=cfg.n_heads)
+        if mode in ("decode", "prefill"):
+            new_cache["rwkv"] = {"s": s_new, "x_tm": xprev}
+    elif kind == RGLRU:
+        b = h.shape[0]
+        r = cfg.rglru_dim or cfg.d_model
+        st = (cache["rec"] if cache else
+              {"h": jnp.zeros((b, r), jnp.float32),
+               "conv": jnp.zeros((b, cfg.conv1d_width - 1, r), cfg.jnp_dtype)})
+        if mode == "decode":
+            o, st_new = rglru_lib.apply_rglru_block_decode(p["rec"], h, st)
+        else:
+            o, st_new = rglru_lib.apply_rglru_block(p["rec"], h, st)
+        if mode in ("decode", "prefill"):
+            new_cache["rec"] = st_new
+    else:
+        raise ValueError(kind)
+    x = x + o
+
+    if "cross" in p and (enc_out is not None
+                         or (cache is not None and "cross" in cache)):
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        oc, cc = _cross_attention(p["cross"], hc, enc_out, cfg, mode,
+                                  cache.get("cross") if cache else None)
+        x = x + oc
+        if cc is not None:
+            new_cache["cross"] = cc
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == RWKV:
+        if mode == "decode":
+            xp = cache["rwkv_cm"]["x_cm"]
+            shifted = xp[:, None]
+            o2 = mlp_lib.apply_rwkv_channel_mix(p["cm"], h, shifted)
+            new_cache["rwkv_cm"] = {"x_cm": h[:, 0]}
+        else:
+            xp = (cache["rwkv_cm"]["x_cm"] if cache else jnp.zeros_like(h[:, 0]))
+            shifted = jnp.concatenate([xp[:, None], h[:, :-1]], axis=1)
+            o2 = mlp_lib.apply_rwkv_channel_mix(p["cm"], h, shifted)
+            if mode == "prefill":
+                new_cache["rwkv_cm"] = {"x_cm": h[:, -1]}
+    else:
+        o2, aux = _ffn(p, h, cfg, moe_groups)
+    x = x + o2
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens, frontend_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    sp = "model" if cfg.attn_sharding == "sequence" and tokens.shape[1] > 1 else None
+    x = constrain(x, DP, sp, None)
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        p = frontend_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, frontend_embeds.astype(x.dtype), 0, axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = (x @ head).astype(jnp.float32)
+    logits = constrain(logits, DP, None, "model")
+    logits = softcap(logits, cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad = cfg.vocab_padded - cfg.vocab_size
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def _run_encoder(params, cfg: ModelConfig, frames):
+    """frames: (B, S_src, d) precomputed frame/patch embeddings (stub)."""
+    x = frames.astype(cfg.jnp_dtype)
+    enc = params["encoder"]
+
+    def body(x, lp):
+        x, _, _ = apply_layer(lp, x, GLOBAL, cfg, "train", causal=False)
+        return x, None
+
+    f = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(f, x, enc["cycles"][0])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frontend_embeds=None,
+            enc_frames=None, mode: str = "train",
+            moe_groups: int | None = None, cache_pad: int = 0):
+    """tokens: (B, S). Returns (logits, cache_or_None, aux)."""
+    assert mode in ("train", "prefill")
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    enc_out = (_run_encoder(params, cfg, enc_frames)
+               if cfg.is_encdec else None)
+    cycle, n_cycles, rem = _cycle_split(cfg)
+    aux_sum: dict[str, Any] = {}
+
+    def merge_aux(a):
+        for k_, v_ in a.items():
+            aux_sum[k_] = aux_sum.get(k_, 0) + v_
+
+    def cycle_body(x, lps):
+        caches, auxes = [], []
+        for j, kind in enumerate(cfg.attn_pattern):
+            x, c, a = apply_layer(lps[j], x, kind, cfg, mode,
+                                  enc_out=enc_out, moe_groups=moe_groups,
+                                  cache_pad=cache_pad)
+            caches.append(c)
+            auxes.append(a)
+        aux = {}
+        for a in auxes:
+            for k_, v_ in a.items():
+                aux[k_] = aux.get(k_, 0) + v_
+        return x, (caches, aux)
+
+    if cfg.remat and mode == "train":
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                cycle_body,
+                policy=jax.checkpoint_policies.checkpoint_dots)
+        else:
+            body = jax.checkpoint(cycle_body)
+    else:
+        body = cycle_body
+    if n_cycles > 0:
+        xs = tuple(params["cycles"])
+        x, (cyc_caches, cyc_aux) = jax.lax.scan(
+            lambda x, lp: body(x, lp), x, xs)
+        merge_aux(jax.tree.map(lambda v: jnp.sum(v, axis=0) if v.ndim else v,
+                               cyc_aux))
+    else:
+        cyc_caches = None
+    rem_caches = []
+    for j, lp in enumerate(params["rem"]):
+        kind = cfg.layer_kind(n_cycles * cycle + j)
+        x, c, a = apply_layer(lp, x, kind, cfg, mode,
+                              enc_out=enc_out, moe_groups=moe_groups,
+                              cache_pad=cache_pad)
+        rem_caches.append(c)
+        merge_aux(a)
+    logits = _logits(params, cfg, x)
+    cache = None
+    if mode == "prefill":
+        cache = {"cycles": cyc_caches, "rem": rem_caches,
+                 "pos": jnp.int32(tokens.shape[1])}
+    return logits, cache, aux_sum
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      src_len: int = 0) -> dict:
+    """Zeroed cache for serve_step dry-runs (shape-only is fine)."""
+    dtype = cfg.jnp_dtype
+    cycle, n_cycles, rem = _cycle_split(cfg)
+
+    def one(kind):
+        c: dict[str, Any] = {}
+        if kind in (GLOBAL, LOCAL):
+            buf = min(cfg.window, cache_len) if kind == LOCAL else cache_len
+            shape = (batch, buf, cfg.n_kv_heads, cfg.head_dim)
+            c["attn"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        elif kind == RWKV:
+            c["rwkv"] = {
+                "s": jnp.zeros((batch, cfg.n_heads, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), jnp.float32),
+                "x_tm": jnp.zeros((batch, cfg.d_model), dtype)}
+            c["rwkv_cm"] = {"x_cm": jnp.zeros((batch, cfg.d_model), dtype)}
+        elif kind == RGLRU:
+            r = cfg.rglru_dim or cfg.d_model
+            c["rec"] = {"h": jnp.zeros((batch, r), jnp.float32),
+                        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, r), dtype)}
+        if cfg.is_encdec:
+            shape = (batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+            c["cross"] = {"ck": jnp.zeros(shape, dtype),
+                          "cv": jnp.zeros(shape, dtype)}
+        return c
+
+    cyc = [jax.tree.map(lambda x: jnp.stack([x] * n_cycles), one(kind))
+           for kind in cfg.attn_pattern] if n_cycles else None
+    remc = [one(cfg.layer_kind(n_cycles * cycle + j)) for j in range(rem)]
+    return {"cycles": cyc, "rem": remc, "pos": jnp.int32(cache_len)}
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, *,
+                moe_groups: int | None = None):
+    """token: (B, 1) -> (logits (B, 1, Vp), new_cache)."""
+    x = _embed(params, cfg, token, None)
+    pos = cache["pos"]
+    cycle, n_cycles, rem = _cycle_split(cfg)
+
+    new_cycles = None
+    if n_cycles:
+        def body(x, lp_c):
+            lps, cs = lp_c
+            new_cs = []
+            for j, kind in enumerate(cfg.attn_pattern):
+                x, c, _ = apply_layer(lps[j], x, kind, cfg, "decode",
+                                      cache=cs[j], pos=pos,
+                                      moe_groups=moe_groups)
+                new_cs.append(c)
+            return x, new_cs
+
+        x, new_cycles = jax.lax.scan(
+            body, x, (tuple(params["cycles"]), tuple(cache["cycles"])))
+    new_rem = []
+    for j, lp in enumerate(params["rem"]):
+        kind = cfg.layer_kind(n_cycles * cycle + j)
+        x, c, _ = apply_layer(lp, x, kind, cfg, "decode",
+                              cache=cache["rem"][j], pos=pos,
+                              moe_groups=moe_groups)
+        new_rem.append(c)
+    logits = _logits(params, cfg, x)
+    return logits, {"cycles": new_cycles, "rem": new_rem, "pos": pos + 1}
+
+
+def lm_loss(logits, targets, cfg: ModelConfig, mask=None):
+    """Next-token CE over real vocab; mask: (B, S) optional.
+
+    Vocab-sharding friendly: the target log-prob is extracted with a one-hot
+    contraction, so every reduction runs *over* the (possibly model-sharded)
+    vocab axis — no cross-shard gather (DESIGN.md §6).
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    ll = tgt - lse
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,99 @@
+"""Serving engine: prefill + batched decode with continuous batching.
+
+``make_prefill``/``make_serve_step`` are the jit-able pure steps the
+dry-run lowers (decode_* / long_* cells lower ``serve_step``). ``Engine``
+is a small host-side driver used by the examples: it packs requests into a
+fixed batch, prefills, decodes until EOS/max-tokens, and refills slots —
+continuous batching at fixed shapes (slot reuse, no recompilation).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_cache,
+)
+
+
+def make_prefill(cfg: ModelConfig, cache_pad: int = 0):
+    def prefill(params, tokens, frontend_embeds=None, enc_frames=None):
+        kw = {}
+        if cfg.frontend == "vision" and frontend_embeds is not None:
+            kw["frontend_embeds"] = frontend_embeds
+        if cfg.is_encdec:
+            kw["enc_frames"] = enc_frames
+        logits, cache, _ = forward(params, cfg, tokens, mode="prefill",
+                                   cache_pad=cache_pad, **kw)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, moe_groups: int | None = None):
+    def serve_step(params, token, cache):
+        logits, cache = decode_step(params, cfg, token, cache,
+                                    moe_groups=moe_groups)
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), logits[:, -1], cache
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Host-side continuous-batching driver (fixed shapes)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch: int, prompt_len: int,
+                 max_new: int, eos: int | None = None):
+        self.cfg, self.params = cfg, params
+        self.batch, self.prompt_len, self.max_new = batch, prompt_len, max_new
+        self.eos = eos
+        self.prefill = jax.jit(make_prefill(cfg, cache_pad=max_new))
+        self.step = jax.jit(make_serve_step(cfg))
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    def submit(self, reqs: list[Request]):
+        self.queue.extend(reqs)
+
+    def run(self):
+        while self.queue:
+            active = [self.queue.pop(0) for _ in
+                      range(min(self.batch, len(self.queue)))]
+            toks = np.zeros((self.batch, self.prompt_len), np.int32)
+            for i, r in enumerate(active):
+                toks[i, -len(r.prompt):] = r.prompt[: self.prompt_len]
+            last_logits, cache = self.prefill(self.params, jnp.asarray(toks))
+            tok = jnp.argmax(last_logits[:, : self.cfg.vocab_size], -1)
+            tok = tok.astype(jnp.int32)[:, None]
+            for _ in range(self.max_new):
+                for i, r in enumerate(active):
+                    if not r.done:
+                        t = int(tok[i, 0])
+                        r.out.append(t)
+                        if self.eos is not None and t == self.eos:
+                            r.done = True
+                nxt, _, cache = self.step(self.params, tok, cache)
+                tok = nxt[:, None]
+                if all(r.done for r in active):
+                    break
+            for r in active:
+                r.done = True
+                self.completed.append(r)
+        return self.completed

@@ -1,0 +1,101 @@
+"""Fixed-capacity padded sparse voxel tensor.
+
+The on-device representation of a spatially-sparse 3D feature map: a padded
+list of active voxel coordinates plus a feature row per voxel. Fixed capacity
+keeps every shape static for jit/pjit; padding slots have ``mask == False``
+and ``coords == -1``.
+
+The paper stores the same information as a "list of active voxels" behind a
+spatial hash (Section II); here the hash is replaced by sorted linear keys
+(see ``repro.core.hashgrid``) which is the TPU-idiomatic equivalent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_COORD = -1
+
+
+class SparseVoxelTensor(NamedTuple):
+    """Padded sparse voxel tensor.
+
+    coords: (V, 3) int32 voxel coordinates, PAD_COORD on padding rows.
+    feats:  (V, C) features.
+    mask:   (V,)   bool, True on active rows.
+    """
+
+    coords: jax.Array
+    feats: jax.Array
+    mask: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def channels(self) -> int:
+        return self.feats.shape[-1]
+
+    def n_active(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+    def replace_feats(self, feats: jax.Array) -> "SparseVoxelTensor":
+        return SparseVoxelTensor(self.coords, feats, self.mask)
+
+
+MAX_RESOLUTION = 1290  # largest R with R**3 < 2**31 (int32-safe linear keys)
+
+
+def linear_key(coords: jax.Array, resolution: int, mask: jax.Array | None = None) -> jax.Array:
+    """Linear voxel key; inactive/padding rows map to the largest key.
+
+    Keys are strictly monotone in (x, y, z) lexicographic order, so sorted
+    keys support binary-search neighbour lookup (AdMAC's hash analogue).
+    Resolution is capped so keys fit int32 (enable jax x64 to lift).
+    """
+    if resolution > MAX_RESOLUTION:
+        raise ValueError(f"resolution {resolution} > int32-safe max {MAX_RESOLUTION}")
+    r = jnp.int32(resolution)
+    c = coords.astype(jnp.int32)
+    key = (c[..., 0] * r + c[..., 1]) * r + c[..., 2]
+    sentinel = jnp.int32(resolution) ** 3
+    if mask is not None:
+        key = jnp.where(mask, key, sentinel)
+    else:
+        key = jnp.where(jnp.all(coords >= 0, axis=-1), key, sentinel)
+    return key
+
+
+def from_dense(dense: np.ndarray, capacity: int | None = None) -> SparseVoxelTensor:
+    """Build a SparseVoxelTensor from a dense (X, Y, Z, C) array (host side).
+
+    A voxel is active iff any channel is non-zero.
+    """
+    occ = np.any(dense != 0, axis=-1)
+    xs, ys, zs = np.nonzero(occ)
+    n = len(xs)
+    cap = capacity if capacity is not None else max(n, 1)
+    if n > cap:
+        raise ValueError(f"capacity {cap} < active voxels {n}")
+    coords = np.full((cap, 3), PAD_COORD, np.int32)
+    feats = np.zeros((cap, dense.shape[-1]), dense.dtype)
+    mask = np.zeros((cap,), bool)
+    coords[:n, 0], coords[:n, 1], coords[:n, 2] = xs, ys, zs
+    feats[:n] = dense[xs, ys, zs]
+    mask[:n] = True
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats), jnp.asarray(mask))
+
+
+def to_dense(t: SparseVoxelTensor, resolution: int) -> np.ndarray:
+    """Materialize to a dense (R, R, R, C) numpy array (host side)."""
+    coords = np.asarray(t.coords)
+    feats = np.asarray(t.feats)
+    mask = np.asarray(t.mask)
+    out = np.zeros((resolution, resolution, resolution, feats.shape[-1]), feats.dtype)
+    c = coords[mask]
+    out[c[:, 0], c[:, 1], c[:, 2]] = feats[mask]
+    return out

@@ -1,0 +1,122 @@
+"""Sharded checkpointing with elastic (re-mesh) restore.
+
+Layout on disk:
+    <dir>/step_<N>/manifest.json     tree structure, shapes, dtypes, mesh,
+                                     data-pipeline state, step
+    <dir>/step_<N>/arrays.npz        one entry per leaf (key = leaf path)
+
+Fault-tolerance contract (DESIGN.md §6):
+  * atomic: written to a tmp dir, fsync'd, then renamed — a crash mid-save
+    never corrupts the latest checkpoint;
+  * elastic: ``restore`` takes the *target* shardings (any mesh shape), so a
+    512-chip checkpoint restores onto 256 chips or vice versa — leaves are
+    saved as full logical arrays and re-device_put under the new sharding;
+  * async: ``save_async`` snapshots to host then writes in a thread so the
+    TPUs keep stepping;
+  * the data-pipeline state rides along, so restart resumes the stream
+    exactly (no repeated/skipped batches).
+
+On a real multi-host pod each host writes only its addressable shards; here
+(single process) the gather is a no-op. The manifest records the source mesh
+for audit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(state, ckpt_dir: str, step: int, data_state: dict | None = None,
+         mesh_shape=None) -> str:
+    keys, leaves, _ = _leaf_paths(state)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {}
+    for k, leaf in zip(keys, leaves):
+        arrays[k] = np.asarray(jax.device_get(leaf))
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "mesh_shape": list(mesh_shape) if mesh_shape else None,
+        "data_state": data_state or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+_SAVE_THREADS: list[threading.Thread] = []
+
+
+def save_async(state, ckpt_dir: str, step: int, **kw) -> threading.Thread:
+    """Snapshot to host synchronously, write in a background thread."""
+    keys, leaves, _ = _leaf_paths(state)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    snapshot = jax.tree_util.tree_unflatten(_leaf_paths(state)[2], host)
+    th = threading.Thread(target=save, args=(snapshot, ckpt_dir, step), kwargs=kw)
+    th.start()
+    _SAVE_THREADS.append(th)
+    return th
+
+
+def wait_for_saves():
+    for th in _SAVE_THREADS:
+        th.join()
+    _SAVE_THREADS.clear()
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template, shardings=None):
+    """Restore into ``template``'s structure; ``shardings`` (same structure
+    or a single sharding) re-places leaves under any target mesh (elastic)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    keys, leaves, treedef = _leaf_paths(template)
+    out = []
+    for k, leaf in zip(keys, leaves):
+        a = arrays[k]
+        if list(a.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {k}: {a.shape} vs {leaf.shape}")
+        a = a.astype(leaf.dtype)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        if not isinstance(shardings, (dict, list, tuple)):
+            tree = jax.tree.map(lambda x: jax.device_put(x, shardings), tree)
+        else:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest

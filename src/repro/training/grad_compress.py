@@ -1,0 +1,65 @@
+"""Error-feedback int8 gradient compression (cross-pod traffic reduction).
+
+Production rationale (DESIGN.md §6): at 1000+ nodes the pod-to-pod
+data-parallel all-reduce rides the slowest links; int8 with per-block scales
+cuts that traffic 4x vs f32 (2x vs bf16) at negligible quality loss when the
+quantization error is fed back into the next step (Seide et al. 2014-style
+EF). The quantize/dequantize pair is inserted around the DP gradient
+reduction; the residual lives with the optimizer state and shards like the
+parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize_int8(x: jax.Array):
+    """Per-block symmetric int8. Returns (q int8, scales f32)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize(q, scale, shape):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return x[:n].reshape(shape)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads, error_state):
+    """Apply EF-int8 round-trip: g' = Q(g + e); e' = (g + e) - g'.
+
+    In a multi-host deployment Q's int8 payload is what crosses the pod
+    links; numerically the round-trip below is identical, so training-quality
+    effects are exactly reproduced on one host.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(x)
+        deq = _dequantize(q, s, g.shape)
+        return deq, x - deq
+
+    out = jax.tree.map(one, grads, error_state)
+    g2 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    e2 = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g2, e2
+
+
+def compression_ratio(params, from_dtype_bytes: int = 2) -> float:
+    """Wire-bytes ratio of the compressed DP reduction (int8 + scales)."""
+    total = sum(p.size for p in jax.tree.leaves(params))
+    comp = total * 1 + (total // BLOCK + 1) * 4
+    return (total * from_dtype_bytes) / comp

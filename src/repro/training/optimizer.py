@@ -1,0 +1,130 @@
+"""Optimizers (hand-rolled, functional): AdamW + Adafactor.
+
+* AdamW: configurable moment dtype (bf16 moments halve optimizer memory —
+  the default for >100B configs, DESIGN.md §6).
+* Adafactor: factored second moment for rank>=2 tensors (row/col RMS), no
+  first moment — what lets llama4-maverick train on a single 16 GB/chip pod.
+
+States are pytrees mirroring params, so they shard with the same
+NamedShardings as the parameters (ZeRO-style).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptHParams:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+    min_dim_factored: int = 128   # adafactor: factor axes >= this
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# -------------------------------- AdamW -----------------------------------
+
+def adamw_init(params, hp: OptHParams):
+    zeros = lambda p: jnp.zeros(p.shape, hp.moment_dtype)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, grads, state, step, hp: OptHParams):
+    grads, gn = clip_by_global_norm(grads, hp.grad_clip)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - hp.b1 ** t
+    c2 = 1.0 - hp.b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = hp.b1 * m.astype(jnp.float32) + (1 - hp.b1) * g32
+        v32 = hp.b2 * v.astype(jnp.float32) + (1 - hp.b2) * jnp.square(g32)
+        u = (m32 / c1) / (jnp.sqrt(v32 / c2) + hp.eps)
+        if p.ndim >= 2:
+            u = u + hp.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - hp.lr * u).astype(p.dtype),
+                m32.astype(hp.moment_dtype), v32.astype(hp.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gn}
+
+
+# ------------------------------ Adafactor ---------------------------------
+
+def _factored(p, hp):
+    return p.ndim >= 2 and p.shape[-1] >= hp.min_dim_factored and \
+        p.shape[-2] >= hp.min_dim_factored
+
+
+def adafactor_init(params, hp: OptHParams):
+    def one(p):
+        if _factored(p, hp):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(one, params)}
+
+
+def adafactor_update(params, grads, state, step, hp: OptHParams):
+    grads, gn = clip_by_global_norm(grads, hp.grad_clip)
+    t = (step + 1).astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if _factored(p, hp):
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            rms = (vr[..., None] / jnp.maximum(denom[..., None], 1e-30)) * vc[..., None, :]
+            u = g32 * jax.lax.rsqrt(jnp.maximum(rms, 1e-30))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            vf = beta2 * v["v"] + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(jnp.maximum(vf, 1e-30))
+            nv = {"v": vf}
+        # update clipping (Adafactor d=1.0)
+        urms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, urms)
+        if p.ndim >= 2:
+            u = u + hp.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - hp.lr * u).astype(p.dtype), nv)
+
+    # state["v"] has a small dict *subtree* at each param leaf; jax.tree.map
+    # passes it whole because params' structure is a prefix of state's.
+    out = jax.tree.map(upd, params, grads, state["v"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"v": new_v}, {"grad_norm": gn}
+
+
+def make_optimizer(name: str, hp: OptHParams):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

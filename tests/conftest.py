@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_shell_scene(rng, resolution=24, channels=4):
+    """Sphere-shell occupancy (surface-sparse, like real scans)."""
+    r = resolution
+    xx, yy, zz = np.meshgrid(*[np.arange(r)] * 3, indexing="ij")
+    d = np.sqrt((xx - r / 2) ** 2 + (yy - r / 2) ** 2 + (zz - r / 2) ** 2)
+    occ = np.abs(d - r / 3) < 0.9
+    dense = np.zeros((r, r, r, channels), np.float32)
+    dense[occ] = rng.normal(size=(occ.sum(), channels)).astype(np.float32)
+    return dense

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.moe_spade import build_dispatch, plan_capacity
+from repro.core.schedule import (
+    schedule_lpt,
+    schedule_naive,
+    schedule_round_robin_sorted,
+)
+from repro.sparse.tensor import linear_key
+from repro.training.grad_compress import _dequantize, _quantize_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_linear_key_bijective_on_grid(res, n, seed):
+    rng = np.random.default_rng(seed)
+    coords = rng.integers(0, res, (n, 3)).astype(np.int32)
+    keys = np.asarray(linear_key(jnp.asarray(coords), res))
+    back = np.stack([keys // (res * res), (keys // res) % res, keys % res], 1)
+    np.testing.assert_array_equal(back, coords)
+    # padding maps to sentinel
+    pad = np.full((1, 3), -1, np.int32)
+    assert int(linear_key(jnp.asarray(pad), res)[0]) == res**3
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(2, 32),
+       st.integers(0, 2**31 - 1))
+def test_moe_dispatch_invariants(tokens, k, n_experts, seed):
+    rng = np.random.default_rng(seed)
+    # real top-k routing picks distinct experts per token
+    kk = min(k, n_experts)
+    idx = np.stack([rng.permutation(n_experts)[:kk] for _ in range(tokens)])
+    idx = jnp.asarray(idx, jnp.int32)
+    k = kk
+    cap = max(4, tokens)
+    slot, table = build_dispatch(idx, n_experts, cap)
+    slot, table = np.asarray(slot), np.asarray(table)
+    # every kept assignment is inverted by the table
+    for t in range(tokens):
+        for j in range(k):
+            if slot[t, j] >= 0:
+                assert table[int(idx[t, j]), slot[t, j]] == t
+    # table entries are unique tokens per expert slot
+    for e in range(n_experts):
+        vals = table[e][table[e] >= 0]
+        assert len(np.unique(vals)) == len(vals)
+    # no expert exceeds capacity (structural)
+    assert table.shape == (n_experts, cap)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 16), st.integers(1, 6), st.floats(0.5, 0.99),
+       st.integers(0, 2**31 - 1))
+def test_rst_capacity_at_least_uniform(n_experts, k, q, seed):
+    rng = np.random.default_rng(seed)
+    tokens = 128
+    loads = rng.multinomial(tokens * k, np.ones(n_experts) / n_experts,
+                            size=8)
+    cap = plan_capacity(loads, n_experts, tokens, k, "RST", quantile=q)
+    assert cap >= tokens * k / n_experts
+    cap_sst = plan_capacity(loads, n_experts, tokens, k, "SST")
+    assert cap_sst >= loads.max()
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(1.0, 1e6), min_size=1, max_size=200),
+       st.integers(1, 16))
+def test_schedule_conservation_and_bounds(work, cores):
+    w = np.asarray(work)
+    for fn in (schedule_naive, schedule_round_robin_sorted, schedule_lpt):
+        a = fn(w, cores)
+        assert np.isclose(a.per_core_work.sum(), w.sum(), rtol=1e-9)
+        assert a.makespan >= w.sum() / cores - 1e-9
+        assert a.makespan >= w.max() - 1e-9
+        got = np.concatenate([o for o in a.order_within if len(o)])
+        assert sorted(got) == list(range(len(w)))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 2000), st.floats(1e-6, 1e6), st.integers(0, 2**31 - 1))
+def test_int8_quantization_error_bound(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s = _quantize_int8(x)
+    back = _dequantize(q, s, x.shape)
+    blockmax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(back - x))) <= blockmax / 127 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(2, 50), st.integers(0, 2**31 - 1))
+def test_lm_loss_matches_reference(vocab_mult, seq, seed):
+    from repro.configs import get_config
+    from repro.models.transformer import lm_loss
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_padded
+    logits = jnp.asarray(rng.normal(size=(2, seq, v)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, seq)), jnp.int32)
+    ref = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), tgt[..., None], -1))
+    got = lm_loss(logits, tgt, cfg)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-4)

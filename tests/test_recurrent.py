@@ -1,0 +1,89 @@
+"""RWKV-6 chunked wkv and RG-LRU scan vs naive step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import rglru as rgl
+from repro.models import rwkv6 as rw
+
+
+def _naive_wkv(r, k, v, logw, u, s0):
+    b, t, h, d = r.shape
+    s = np.asarray(s0, np.float64).copy()
+    outs = np.zeros((b, t, h, d))
+    r_, k_, v_, w_ = (np.asarray(x, np.float64) for x in (r, k, v, logw))
+    for ti in range(t):
+        kv = np.einsum("bhd,bhe->bhde", k_[:, ti], v_[:, ti])
+        outs[:, ti] = np.einsum(
+            "bhd,bhde->bhe", r_[:, ti],
+            s + u[None, :, :, None] * kv)
+        s = np.exp(w_[:, ti])[..., None] * s + kv
+    return outs, s
+
+
+@pytest.mark.parametrize("t,chunk", [(32, 8), (48, 16), (16, 16)])
+def test_chunked_wkv_matches_recurrence(rng, t, chunk):
+    b, h, d = 2, 3, 8
+    r = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(b, t, h, d)) * 0.5, jnp.float32))
+    u = np.asarray(rng.normal(size=(h, d)), np.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, d, d)) * 0.1, jnp.float32)
+    o, s_fin = rw.chunked_wkv(r, k, v, logw, jnp.asarray(u), s0, chunk)
+    o_ref, s_ref = _naive_wkv(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(o), o_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), s_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_decode_continues_chunked(rng):
+    b, t, h, d = 1, 16, 2, 8
+    mk = lambda: jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    logw = -jnp.exp(mk() * 0.3)
+    u = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    o_all, _ = rw.chunked_wkv(r, k, v, logw, u, s0, 8)
+    o_pre, s_mid = rw.chunked_wkv(
+        r[:, :8], k[:, :8], v[:, :8], logw[:, :8], u, s0, 8)
+    o_step, _ = rw.wkv_decode_step(
+        r[:, 8, :, :], k[:, 8], v[:, 8], logw[:, 8], u, s_mid)
+    np.testing.assert_allclose(np.asarray(o_step), np.asarray(o_all[:, 8]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_scan_matches_steps(rng):
+    b, t, r_dim = 2, 24, 16
+    p = rgl.init_rglru_block(jax.random.PRNGKey(0), 32, r_dim, 4, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, t, r_dim)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(b, r_dim)) * 0.1, jnp.float32)
+    y, h_last = rgl.rglru_scan(p, x, h0)
+    h = h0
+    for ti in range(t):
+        h, _ = rgl.rglru_step(p, x[:, ti], h)
+        np.testing.assert_allclose(np.asarray(y[:, ti]), np.asarray(h),
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_block_decode_continues(rng):
+    b, t, d, r_dim = 1, 12, 16, 16
+    p = rgl.init_rglru_block(jax.random.PRNGKey(1), d, r_dim, 4, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, t + 1, d)), jnp.float32)
+    st0 = {"h": jnp.zeros((b, r_dim), jnp.float32),
+           "conv": jnp.zeros((b, 3, r_dim), jnp.float32)}
+    full, _ = rgl.apply_rglru_block(p, x, st0)
+    pre, st = rgl.apply_rglru_block(p, x[:, :t], st0)
+    step, _ = rgl.apply_rglru_block_decode(p, x[:, t:t + 1], st)
+    np.testing.assert_allclose(np.asarray(step[:, 0]), np.asarray(full[:, t]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_decay_in_unit_interval(rng):
+    p = rgl.init_rglru_block(jax.random.PRNGKey(2), 8, 8, 4, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 5, 8)) * 3, jnp.float32)
+    a, _ = rgl._rglru_gates(p, x)
+    a = np.asarray(a)
+    assert (a > 0).all() and (a < 1).all()

@@ -1,0 +1,135 @@
+"""Core sparse-3D stack: AdMAC neighbours, COIR, sparse conv vs dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_shell_scene
+from repro.core import sparse_conv as sc
+from repro.core.coir import (
+    build_cirf,
+    build_corf,
+    coir_size_words,
+    rulebook_size_words,
+    transpose_flavor,
+)
+from repro.core.hashgrid import (
+    build_neighbor_table,
+    downsample_coords,
+    kernel_offsets,
+)
+from repro.sparse.tensor import from_dense, to_dense
+from repro.sparse.voxelize import voxelize
+
+
+@pytest.fixture
+def scene(rng):
+    dense = make_shell_scene(rng, 20, 5)
+    return dense, from_dense(dense)
+
+
+def test_neighbor_table_vs_bruteforce(rng):
+    R = 12
+    coords = rng.integers(0, R, (60, 3)).astype(np.int32)
+    coords = np.unique(coords, axis=0)
+    v = len(coords)
+    mask = np.ones(v, bool)
+    offs = kernel_offsets(3)
+    table = np.asarray(build_neighbor_table(
+        jnp.asarray(coords), jnp.asarray(mask), jnp.asarray(offs), R))
+    lut = {tuple(c): i for i, c in enumerate(coords)}
+    for i in range(v):
+        for k, off in enumerate(offs):
+            probe = tuple(coords[i] + off)
+            expect = lut.get(probe, -1)
+            if any(p < 0 or p >= R for p in probe):
+                expect = -1
+            assert table[i, k] == expect, (i, k, probe)
+
+
+def test_kernel_offsets_conventions():
+    o3 = kernel_offsets(3)
+    assert o3.shape == (27, 3) and o3.min() == -1 and o3.max() == 1
+    o2 = kernel_offsets(2)
+    assert o2.shape == (8, 3) and o2.min() == 0 and o2.max() == 1
+
+
+def test_downsample_unique_sorted(scene):
+    dense, t = scene
+    out_c, out_m = downsample_coords(t.coords, t.mask, 20, 2)
+    out_c, out_m = np.asarray(out_c), np.asarray(out_m)
+    act = out_c[out_m]
+    assert len(np.unique(act, axis=0)) == len(act)
+    expect = np.unique(np.asarray(t.coords)[np.asarray(t.mask)] // 2, axis=0)
+    assert len(act) == len(expect)
+
+
+def test_submanifold_conv_matches_dense_oracle(rng, scene):
+    dense, t = scene
+    params = sc.init_sparse_conv(jax.random.PRNGKey(0), 27, 5, 7)
+    coir = sc.submanifold_coir(t, 20, 3)
+    out = sc.submanifold_conv(t, coir, params)
+    oracle = sc.dense_submanifold_reference(
+        dense, np.asarray(params.weight), np.asarray(params.bias))
+    np.testing.assert_allclose(to_dense(out, 20), oracle, rtol=1e-4, atol=1e-4)
+
+
+def test_corf_equals_cirf(scene):
+    dense, t = scene
+    params = sc.init_sparse_conv(jax.random.PRNGKey(1), 27, 5, 6)
+    offs = jnp.asarray(kernel_offsets(3))
+    cirf = build_cirf(t.coords, t.mask, t.coords, t.mask, offs, 20)
+    corf = build_corf(t.coords, t.mask, t.coords, t.mask, offs, 20)
+    out_cirf = sc.sparse_conv_cirf(t.feats, cirf, params)
+    out_corf = sc.sparse_conv_corf(t.feats, corf, params, t.capacity)
+    np.testing.assert_allclose(np.asarray(out_corf), np.asarray(out_cirf),
+                               rtol=1e-4, atol=1e-4)
+    # transpose_flavor reproduces build_corf for submanifold metadata
+    np.testing.assert_array_equal(
+        np.asarray(transpose_flavor(cirf, t.capacity).indices),
+        np.asarray(corf.indices))
+
+
+def test_strided_and_transposed_conv(rng, scene):
+    dense, t = scene
+    p_dn = sc.init_sparse_conv(jax.random.PRNGKey(2), 8, 5, 6)
+    down, r2, _ = sc.strided_conv(t, 20, p_dn)
+    assert r2 == 10
+    # oracle
+    offs = kernel_offsets(2, centered=False)
+    occ = np.any(dense != 0, axis=-1)
+    exp = np.zeros((10, 10, 10, 6), np.float32)
+    occ_o = np.zeros((10, 10, 10), bool)
+    for ki, (dx, dy, dz) in enumerate(offs):
+        exp += dense[dx::2, dy::2, dz::2].astype(np.float32) @ np.asarray(p_dn.weight)[ki]
+        occ_o |= occ[dx::2, dy::2, dz::2]
+    exp = (exp + np.asarray(p_dn.bias)) * occ_o[..., None]
+    np.testing.assert_allclose(to_dense(down, 10), exp, rtol=1e-4, atol=1e-4)
+    # transposed conv restores the fine active set
+    p_up = sc.init_sparse_conv(jax.random.PRNGKey(3), 8, 6, 5)
+    coir_t = sc.transposed_coir(down, t.coords, t.mask, 20)
+    up = sc.transposed_conv(down, coir_t, t.coords, t.mask, p_up)
+    assert bool(jnp.all(up.mask == t.mask))
+    assert not bool(jnp.any(jnp.isnan(up.feats)))
+
+
+def test_coir_compression_accounting(scene):
+    dense, t = scene
+    coir = sc.submanifold_coir(t, 20, 3)
+    cw, rw = int(coir_size_words(coir)), int(rulebook_size_words(coir))
+    arf = float(coir.arf())
+    # COIR beats the rulebook whenever ARF > 2 (paper's compression claim)
+    if arf > 2.5:
+        assert cw < rw
+
+
+def test_voxelize_roundtrip(rng):
+    pts = rng.random((500, 3)).astype(np.float32)
+    feats = rng.normal(size=(500, 3)).astype(np.float32)
+    coords, vf, mask = voxelize(pts, feats, 16, capacity=600)
+    n = mask.sum()
+    assert n > 0
+    act = coords[mask]
+    assert act.min() >= 0 and act.max() < 16
+    assert len(np.unique(
+        (act[:, 0] * 16 + act[:, 1]) * 16 + act[:, 2])) == n

@@ -1,0 +1,135 @@
+"""Training loop, optimizers, gradient compression, checkpoint/elastic."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import TokenStream
+from repro.training import checkpoint, grad_compress
+from repro.training.optimizer import OptHParams
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    hp = OptHParams(lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+    ds = TokenStream(cfg.vocab_size, batch=8, seq_len=64, seed=0)
+    return cfg, hp, state, ds
+
+
+def test_loss_decreases(small_setup):
+    cfg, hp, state, ds = small_setup
+    step = jax.jit(make_train_step(cfg, hp))
+    losses = []
+    for _ in range(12):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in next(ds).items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2
+    assert np.isfinite(m["grad_norm"])
+
+
+def test_microbatching_matches_full_batch():
+    cfg = get_config("stablelm-1.6b").reduced()
+    hp = OptHParams(lr=1e-3)
+    s1 = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+    s2 = jax.tree.map(lambda x: x, s1)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (8, 33)), jnp.int32)}
+    f1 = jax.jit(make_train_step(cfg, hp, n_microbatches=1))
+    f2 = jax.jit(make_train_step(cfg, hp, n_microbatches=4))
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f2(s2, batch)
+    # same data -> same mean loss and (approximately) same updated params
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_adafactor_trains_moe():
+    cfg = get_config("llama4-maverick-400b-a17b").reduced()
+    assert cfg.optimizer == "adafactor"
+    hp = OptHParams(lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+    step = jax.jit(make_train_step(cfg, hp))
+    ds = TokenStream(cfg.vocab_size, 4, 32, 1)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in next(ds).items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_grad_compression_error_feedback(rng):
+    g = {"a": jnp.asarray(rng.normal(size=(1000,)), jnp.float32)}
+    err = grad_compress.init_error_state(g)
+    out, err = grad_compress.compress_decompress(g, err)
+    # round-trip error is bounded by the block scale / 127
+    scale = float(jnp.max(jnp.abs(g["a"]))) / 127
+    assert float(jnp.max(jnp.abs(out["a"] - g["a"]))) < scale * 1.5
+    # error feedback: repeated same gradient -> average converges
+    acc = jnp.zeros_like(g["a"])
+    e = grad_compress.init_error_state(g)
+    for _ in range(20):
+        o, e = grad_compress.compress_decompress(g, e)
+        acc = acc + o["a"]
+    np.testing.assert_allclose(np.asarray(acc / 20), np.asarray(g["a"]),
+                               rtol=0, atol=scale * 1.2)
+    assert grad_compress.compression_ratio(g, 4) > 3.5
+
+
+def test_compressed_training_converges():
+    cfg = get_config("stablelm-1.6b").reduced()
+    hp = OptHParams(lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+    state["err"] = grad_compress.init_error_state(state["params"])
+    step = jax.jit(make_train_step(cfg, hp, compress_grads=True))
+    ds = TokenStream(cfg.vocab_size, 8, 48, 2)
+    losses = []
+    for _ in range(10):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in next(ds).items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_checkpoint_roundtrip_and_resume(small_setup, tmp_path):
+    cfg, hp, state, _ = small_setup
+    ds = TokenStream(cfg.vocab_size, 4, 16, 9)
+    next(ds)
+    path = checkpoint.save(state, str(tmp_path), 7, data_state=ds.state())
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    restored, man = checkpoint.restore(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # data pipeline resumes exactly
+    ds2 = TokenStream.from_state(cfg.vocab_size, 4, 16, man["data_state"])
+    np.testing.assert_array_equal(next(ds)["tokens"], next(ds2)["tokens"])
+
+
+def test_checkpoint_async_and_atomic(small_setup, tmp_path):
+    cfg, hp, state, _ = small_setup
+    th = checkpoint.save_async(state, str(tmp_path), 3)
+    checkpoint.wait_for_saves()
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+    # no .tmp leftovers
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_elastic_restore_to_sharded(small_setup, tmp_path):
+    """Restore under explicit shardings on the host mesh (elastic re-mesh)."""
+    cfg, hp, state, _ = small_setup
+    checkpoint.save(state, str(tmp_path), 1)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    sh = NamedSharding(mesh, P())
+    restored, _ = checkpoint.restore(str(tmp_path), 1, state, shardings=sh)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding == sh
