@@ -1,7 +1,6 @@
 """§IV-A: COIR metadata compression vs per-weight-plane rulebook."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import build_scene, emit, scene_metadata
 from repro.core.coir import coir_size_words, rulebook_size_words

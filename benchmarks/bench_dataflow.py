@@ -8,6 +8,7 @@ SPADE-tiled gather-GEMM path on this host CPU.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import build_scene, emit, scene_metadata, time_fn
@@ -15,8 +16,6 @@ from repro.core import carom, soar, spade
 from repro.core.sparse_conv import init_sparse_conv, sparse_conv_cirf
 from repro.core.tiles import build_tile_plan
 from repro.kernels.sspnna.ops import sspnna_conv_from_plan
-
-import jax
 
 
 def run():

@@ -1,14 +1,12 @@
 """Wall-clock microbench of reduced-arch train/decode steps (CPU host)."""
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.configs import get_config
-from repro.models.transformer import forward, init_lm
 from repro.serving.engine import make_prefill, make_serve_step
 from repro.training.optimizer import OptHParams
 from repro.training.train_loop import init_train_state, make_train_step

@@ -6,12 +6,15 @@ and dispatch-tensor waste for (a) fixed capacity factor 1.25, (b) SST
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.moe_spade import build_dispatch, expert_load_stats, plan_capacity
-
-import jax.numpy as jnp
+from repro.core.moe_spade import (
+    build_dispatch,
+    expert_load_stats,
+    plan_capacity,
+)
 
 
 def run():

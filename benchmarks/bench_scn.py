@@ -11,12 +11,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build_scene, emit, scene_metadata
+from benchmarks.common import build_scene, emit
 from repro.core import spade
 from repro.models.scn import UNetConfig, build_unet_metadata
-from repro.sparse.tensor import SparseVoxelTensor
-
-import jax.numpy as jnp
 
 
 def run():

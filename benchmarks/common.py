@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import soar
-from repro.core.coir import COIR
 from repro.core.hashgrid import build_neighbor_table, kernel_offsets
 from repro.core.sparse_conv import submanifold_coir
 from repro.data.scenes import make_scene

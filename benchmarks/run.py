@@ -3,14 +3,29 @@
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0.0 for
 analytical/model benchmarks; see each module's docstring for the mapping to
 the paper's tables and what is measured vs modeled).
+
+``--quick`` runs the subset CI uses as a non-blocking smoke (fast modules
+only) so perf scripts cannot silently rot; ``--only`` picks modules by name.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
+# modules cheap enough for the CI smoke job (reduced configs, small scenes)
+QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
+         "bench_dataflow")
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fast subset (the CI smoke job)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names, e.g. bench_coir")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_coir,
         bench_dataflow,
@@ -22,10 +37,22 @@ def main() -> None:
         bench_spade_attrs,
     )
 
+    modules = [bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
+               bench_dataflow, bench_scn, bench_moe, bench_lm]
+    if args.only:
+        wanted = {m.strip() for m in args.only.split(",")}
+        known = {m.__name__.split(".")[-1] for m in modules}
+        unknown = wanted - known
+        if unknown:
+            ap.error(f"unknown modules {sorted(unknown)}; "
+                     f"known: {sorted(known)}")
+        modules = [m for m in modules if m.__name__.split(".")[-1] in wanted]
+    elif args.quick:
+        modules = [m for m in modules if m.__name__.split(".")[-1] in QUICK]
+
     print("name,us_per_call,derived")
     t0 = time.time()
-    for mod in (bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
-                bench_dataflow, bench_scn, bench_moe, bench_lm):
+    for mod in modules:
         mt = time.time()
         mod.run()
         print(f"# {mod.__name__} done in {time.time() - mt:.1f}s",

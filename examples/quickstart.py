@@ -5,10 +5,9 @@ pointcloud -> voxelize -> AdMAC adjacency -> SOAR reorder -> COIR metadata
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import soar, spade
 from repro.core.hashgrid import build_neighbor_table, kernel_offsets

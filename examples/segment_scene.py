@@ -9,10 +9,9 @@ Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 4]
 import argparse
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import spade
 from repro.core.sparse_conv import submanifold_coir
@@ -44,7 +43,6 @@ def main():
     table = spade.build_offline_table([layer], msa, 64 * 1024)
     print("offline-SPADE table ready")
 
-    fwd = jax.jit(lambda p, f, meta: apply_unet(p, f, meta))
     for rid in range(args.requests):
         t_req = time.time()
         coords, feats, labels, mask = make_scene(1000 + rid, args.res, args.cap)

@@ -7,10 +7,9 @@ stack. Run:
 import argparse
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.scenes import N_CLASSES, make_scene
 from repro.models.scn import (

@@ -4,21 +4,27 @@
 smoke-test size. The SCN U-Net (the paper's own workload) lives in
 ``repro.models.scn.UNetConfig``.
 """
-from repro.configs.base import ModelConfig, MoEConfig, get_config, list_configs, register
-
 from repro.configs import (  # noqa: F401  — registration side effects
+    gemma2_2b,
+    granite_8b,
+    h2o_danube3_4b,
     llama4_maverick_400b,
     moonshot_v1_16b,
-    stablelm_1_6b,
-    h2o_danube3_4b,
-    granite_8b,
-    gemma2_2b,
     pixtral_12b,
+    recurrentgemma_9b,
     rwkv6_7b,
     seamless_m4t_medium,
-    recurrentgemma_9b,
+    stablelm_1_6b,
+)
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    get_config,
+    list_configs,
+    register,
 )
 
 ARCH_NAMES = list_configs()
 
-__all__ = ["ModelConfig", "MoEConfig", "get_config", "list_configs", "register", "ARCH_NAMES"]
+__all__ = ["ModelConfig", "MoEConfig", "get_config", "list_configs",
+           "register", "ARCH_NAMES"]

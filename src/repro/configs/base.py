@@ -7,7 +7,6 @@ ShapeDtypeStructs in the dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 
 import jax.numpy as jnp
@@ -86,7 +85,8 @@ class ModelConfig:
     def param_count(self) -> int:
         """Analytical parameter count (used for 6ND roofline numbers)."""
         d, v = self.d_model, self.vocab_padded
-        att = d * self.n_heads * self.head_dim * 2 + d * self.n_kv_heads * self.head_dim * 2
+        att = (d * self.n_heads * self.head_dim * 2
+               + d * self.n_kv_heads * self.head_dim * 2)
         if self.act in ("swiglu", "geglu"):
             ffn = 3 * d * self.d_ff
         else:
@@ -117,7 +117,8 @@ class ModelConfig:
             return self.param_count()
         d = self.d_model
         ffn = (3 if self.act in ("swiglu", "geglu") else 2) * d * self.d_ff
-        dense_total = self.param_count() - self.n_layers // self.moe.moe_layer_period * (
+        n_moe_layers = self.n_layers // self.moe.moe_layer_period
+        dense_total = self.param_count() - n_moe_layers * (
             self.moe.n_experts * ffn
         )
         return dense_total + self.n_layers // self.moe.moe_layer_period * (
@@ -126,7 +127,8 @@ class ModelConfig:
 
     def reduced(self) -> "ModelConfig":
         """Family-preserving small config for CPU smoke tests."""
-        n_kv = max(1, min(self.n_kv_heads, 4 * self.n_kv_heads // max(self.n_heads, 1), 4))
+        n_kv = max(1, min(self.n_kv_heads,
+                          4 * self.n_kv_heads // max(self.n_heads, 1), 4))
         if self.n_kv_heads == self.n_heads:
             n_kv = 4
         moe = self.moe

@@ -21,11 +21,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.spade import (
+    FLAVORS,
+    WALK_PATTERNS,
     Dataflow,
     LayerSpec,
     SparsityAttributes,
-    WALK_PATTERNS,
-    FLAVORS,
     _pow2_range,
     data_accesses,
     tile_footprint,

@@ -159,7 +159,8 @@ def soar_hierarchical(
     return SoarResult(order, chunk_starts)
 
 
-def raster_order(coords: np.ndarray, active_mask: np.ndarray, axes=(0, 1, 2)) -> np.ndarray:
+def raster_order(coords: np.ndarray, active_mask: np.ndarray,
+                 axes=(0, 1, 2)) -> np.ndarray:
     """Raster-scan baseline orderings (Fig 23): lexicographic sort along the
     given axis priority."""
     act = np.flatnonzero(np.asarray(active_mask))

@@ -16,7 +16,6 @@ tile plans; this module is also its numerical oracle.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

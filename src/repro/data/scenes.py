@@ -59,7 +59,7 @@ def make_scene(
     pts_list, nrm_list, lbl_list = [], [], []
 
     def add(pts, normals, label, frac):
-        keep = pts_list.append(pts)
+        pts_list.append(pts)
         nrm_list.append(normals)
         lbl_list.append(np.full(len(pts), label, np.int32))
 

@@ -1,0 +1,32 @@
+"""Distributed-execution layer: sharding hints, rules, collectives, pipeline.
+
+Four small modules, one contract: everything is an exact no-op (or a
+single-device identity) when no mesh is active, so CPU tests and single-host
+runs execute the same code path the 512-chip dry-run lowers.
+
+* ``hints``       — ``DP`` / ``constrain`` / ``use_mesh``: PartitionSpec-style
+  sharding hints that model code sprinkles on activations.
+* ``sharding``    — ``ShardingRules``: named in/out shardings for params,
+  optimizer state, batches and KV caches, consumed by ``launch.dryrun`` and
+  ``training.train_loop``.
+* ``collectives`` — ``compressed_psum`` (EF-int8 cross-pod DP reduction built
+  on ``training.grad_compress``) and the expert-parallel all-to-all.
+* ``pipeline``    — ``stack_stages`` / ``pipeline_apply``: GPipe-style
+  stage-stacked pipeline execution over a ``"pipe"`` mesh axis.
+"""
+from repro.dist.collectives import compressed_psum, expert_all_to_all
+from repro.dist.hints import DP, active_mesh, constrain, use_mesh
+from repro.dist.pipeline import pipeline_apply, stack_stages
+from repro.dist.sharding import ShardingRules
+
+__all__ = [
+    "DP",
+    "ShardingRules",
+    "active_mesh",
+    "compressed_psum",
+    "constrain",
+    "expert_all_to_all",
+    "pipeline_apply",
+    "stack_stages",
+    "use_mesh",
+]

@@ -1,0 +1,116 @@
+"""PartitionSpec-style sharding hints for model code.
+
+Model code annotates activations with ``constrain(x, DP, None, "model")``
+style hints — one entry per array dimension. The hints only take effect
+inside a ``use_mesh(mesh, dp=...)`` context (the dry-run wraps lowering in
+one); with no active mesh ``constrain`` is an *exact* no-op that returns its
+input unchanged, so single-device tests and CPU CI run the same code the
+512-chip lowering sees.
+
+Entry semantics per dimension:
+
+* ``DP``        — shard over the active data-parallel axes (whatever tuple
+  ``use_mesh`` declared, e.g. ``("pod", "data")`` or, for the full-mesh-DP
+  variant, ``("pod", "data", "model")``).
+* ``"name"``    — shard over that mesh axis. Silently dropped when the axis
+  is absent, already consumed by DP (full-mesh DP folds "model" into the
+  batch axes), or does not divide the dimension.
+* ``None``      — leave the dimension unsharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class _DPSentinel:
+    """Placeholder for 'the active data-parallel axes' in constrain()."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "DP"
+
+
+DP = _DPSentinel()
+
+# (mesh, dp_axes) while a use_mesh() context is active, else None.
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, *, dp=("data",)):
+    """Activate ``mesh`` for ``constrain`` hints; ``dp`` names the DP axes.
+
+    DP axes absent from the mesh are dropped (call sites name the multi-pod
+    superset, e.g. ``("pod", "data")`` on a single-pod mesh), but an entirely
+    unknown dp set is a config error and raises.
+    """
+    dp = (dp,) if isinstance(dp, str) else tuple(dp)
+    present = tuple(a for a in dp if a in mesh.axis_names)
+    if dp and not present:
+        raise ValueError(
+            f"none of dp axes {dp} are in mesh axes {mesh.axis_names}")
+    dp = present
+    token = _ACTIVE.set((mesh, dp))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_mesh():
+    """Returns (mesh, dp_axes) inside use_mesh(), else None."""
+    return _ACTIVE.get()
+
+
+def _axis_sizes(mesh, axes):
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def constrain(x, *entries):
+    """Apply a per-dimension sharding hint; identity when no mesh is active."""
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, dp = active
+    if len(entries) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(entries)} entries for rank-{x.ndim} array")
+    used = set(dp)
+    spec = []
+    for dim, entry in zip(x.shape, entries):
+        if entry is DP:
+            axes = tuple(a for a in dp if mesh.shape[a] > 1)
+            if axes and dim % _axis_sizes(mesh, axes) == 0 and dim > 0:
+                spec.append(axes if len(axes) > 1 else axes[0])
+            else:
+                spec.append(None)
+        elif entry is None:
+            spec.append(None)
+        else:
+            cand = (entry,) if isinstance(entry, str) else tuple(entry)
+            names, size = [], 1
+            for a in cand:
+                if (a in mesh.axis_names and a not in used
+                        and mesh.shape[a] > 1
+                        and dim % (size * mesh.shape[a]) == 0):
+                    names.append(a)
+                    size *= mesh.shape[a]
+            used.update(names)
+            if not names:
+                spec.append(None)
+            else:
+                spec.append(tuple(names) if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

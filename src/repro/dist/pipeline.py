@@ -1,0 +1,101 @@
+"""GPipe-style stage-stacked pipeline execution over a "pipe" mesh axis.
+
+``stack_stages`` stacks per-stage parameter pytrees along a new leading
+axis; ``pipeline_apply`` shards that axis over the pipeline mesh axis and
+runs the classic GPipe schedule with ``ppermute`` hand-offs: microbatch m
+occupies stage s at step t = s + m, so n_micro microbatches drain through
+n_stages stages in n_micro + n_stages - 1 steps.
+
+On a 1-wide pipe axis the schedule collapses to a plain serial scan over
+microbatches — no collectives, any output shape — which is what the serving
+tests exercise on a single host. With 2+ stages the stage function must be
+shape-preserving (activations hand off between identical stage bodies).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+
+
+def stack_stages(stages):
+    """Stack a list of per-stage param pytrees along a new leading axis."""
+    if not stages:
+        raise ValueError("stack_stages needs at least one stage")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
+
+
+def _first_stage(stacked):
+    return jax.tree.map(lambda a: a[0], stacked)
+
+
+def pipeline_apply(mesh, stage_fn, stage_params, x, *, axis: str = "pipe"):
+    """Run ``x`` (n_micro, micro_batch, ...) through the stacked stages.
+
+    ``stage_fn(params, microbatch) -> microbatch`` is one stage body;
+    ``stage_params`` comes from ``stack_stages`` and must have exactly
+    ``mesh.shape[axis]`` stages. Returns the (n_micro, ...) outputs of the
+    last stage, replicated over the pipe axis.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    n_stages = mesh.shape[axis]
+    n_stacked = jax.tree.leaves(stage_params)[0].shape[0]
+    if n_stacked != n_stages:
+        raise ValueError(
+            f"{n_stacked} stacked stages vs {n_stages}-wide {axis!r} axis")
+    n_micro = x.shape[0]
+
+    if n_stages == 1:
+        params = _first_stage(stage_params)
+
+        def body(_, mb):
+            return None, stage_fn(params, mb)
+
+        _, out = jax.lax.scan(body, None, x)
+        return out
+
+    out_struct = jax.eval_shape(
+        stage_fn,
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                     stage_params),
+        jax.ShapeDtypeStruct(x.shape[1:], x.dtype))
+    if out_struct.shape != x.shape[1:] or out_struct.dtype != x.dtype:
+        raise ValueError(
+            f"multi-stage pipelines need shape/dtype-preserving stages; got "
+            f"{x.shape[1:]}:{x.dtype} -> {out_struct.shape}:{out_struct.dtype}")
+
+    def per_device(params, x_all):
+        p = _first_stage(params)  # local (1, ...) slice -> this stage's tree
+        stage = jax.lax.axis_index(axis)
+        last = n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def step(carry, t):
+            state, buf = carry
+            # stage 0 pulls fresh microbatches; others consume the hand-off
+            feed = x_all[jnp.clip(t, 0, n_micro - 1)]
+            inp = jnp.where(stage == 0, feed, state)
+            out = stage_fn(p, inp)
+            m = t - last
+            write = (stage == last) & (m >= 0)
+            mc = jnp.clip(m, 0, n_micro - 1)
+            buf = buf.at[mc].set(jnp.where(write, out, buf[mc]))
+            state = jax.lax.ppermute(out, axis, perm)
+            return (state, buf), None
+
+        state0 = jnp.zeros(x_all.shape[1:], out_struct.dtype)
+        buf0 = jnp.zeros((n_micro,) + out_struct.shape, out_struct.dtype)
+        (_, buf), _ = jax.lax.scan(
+            step, (state0, buf0), jnp.arange(n_micro + n_stages - 1))
+        # only the last stage wrote real outputs; psum replicates them
+        buf = jnp.where(stage == last, buf, jnp.zeros_like(buf))
+        return jax.lax.psum(buf, axis)
+
+    param_specs = jax.tree.map(lambda _: P(axis), stage_params)
+    x_spec = P(*([None] * x.ndim))
+    fn = shard_map(per_device, mesh,
+                   in_specs=(param_specs, x_spec), out_specs=x_spec)
+    return fn(stage_params, x)

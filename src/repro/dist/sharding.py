@@ -1,0 +1,135 @@
+"""ShardingRules: named in/out shardings for params, state, batches, caches.
+
+One rules object per (config, mesh) pair. Mesh axes follow
+``launch.mesh.make_production_mesh``: ``("data", "model")`` single pod or
+``("pod", "data", "model")`` multi-pod. By default parameters are
+tensor-parallel over ``"model"`` and replicated over the DP axes, while
+batches shard their leading dimension over the DP axes (ZeRO-style optimizer
+state rides the same per-leaf rule as the parameters it mirrors).
+
+``full_dp=True`` is the dry-run's v4 variant: the model axis is folded into
+data parallelism, so parameters are replicated and batches shard over every
+mesh axis.
+
+Every method is a divisibility-checked heuristic, never an error: a
+dimension that no axis divides is simply left unsharded, which is what makes
+the same rules valid on a 1-device host mesh and on 2x16x16 pods.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class ShardingRules:
+    def __init__(self, cfg, mesh, *, full_dp: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.full_dp = full_dp
+        names = mesh.axis_names
+        has_model = "model" in names
+        self.model_axis = "model" if (has_model and not full_dp) else None
+        dp = tuple(a for a in names if a != "model")
+        if full_dp and has_model:
+            dp = dp + ("model",)
+        # axes of size 1 contribute nothing; dropping them keeps specs tidy
+        self.dp_axes = tuple(a for a in dp if mesh.shape[a] > 1)
+        self.model_size = (
+            mesh.shape["model"] if self.model_axis
+            and mesh.shape["model"] > 1 else 1)
+        self.dp_size = math.prod(mesh.shape[a] for a in self.dp_axes) \
+            if self.dp_axes else 1
+
+    # -- helpers ------------------------------------------------------------
+
+    def _named(self, *entries) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*entries))
+
+    def replicated(self) -> NamedSharding:
+        return self._named()
+
+    def _dp_entry(self):
+        if not self.dp_axes:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def _divides(self, dim: int, size: int) -> bool:
+        return size > 1 and dim >= size and dim % size == 0
+
+    # -- parameters / optimizer state --------------------------------------
+
+    def _param_spec(self, leaf) -> NamedSharding:
+        """Tensor-parallel over "model" on the innermost divisible dim.
+
+        Stacked per-cycle leaves (leading scan axis) never shard dim 0 —
+        splitting layers across devices is the pipeline's job, not TP's.
+        """
+        shape = leaf.shape
+        if self.model_size > 1 and shape:
+            start = 0 if len(shape) == 1 else 1
+            for d in range(len(shape) - 1, start - 1, -1):
+                if self._divides(shape[d], self.model_size):
+                    entries = [None] * len(shape)
+                    entries[d] = "model"
+                    return self._named(*entries)
+        return self.replicated()
+
+    def params_shardings(self, params):
+        """Pytree of NamedShardings matching a params (or grads) pytree."""
+        return jax.tree.map(self._param_spec, params)
+
+    def state_shardings(self, state):
+        """Train-state tree: params, optimizer moments, step, EF residual.
+
+        Optimizer state mirrors the parameters (ZeRO-style, see
+        ``training.optimizer``), so the per-leaf parameter rule applies to
+        the whole tree; scalars (``step``) come out replicated.
+        """
+        return jax.tree.map(self._param_spec, state)
+
+    # -- batches ------------------------------------------------------------
+
+    def _batch_spec(self, leaf) -> NamedSharding:
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if shape and self._divides(shape[0], self.dp_size):
+            entries[0] = self._dp_entry()
+        return self._named(*entries)
+
+    def batch_shardings(self, batch):
+        """Input batches shard dim 0 (global batch) over the DP axes."""
+        return jax.tree.map(self._batch_spec, batch)
+
+    # -- decode caches -------------------------------------------------------
+
+    def _cache_spec(self, leaf) -> NamedSharding:
+        """KV/state caches: heads over "model" when they divide, else the
+        longest divisible dim (flash-decoding-style length sharding); batch
+        over DP. Handles both per-layer leaves (batch leading) and stacked
+        per-cycle leaves (n_cycles leading)."""
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if not shape:
+            return self.replicated()
+        model_dim = None
+        if self.model_size > 1:
+            head_sizes = {self.cfg.n_kv_heads, self.cfg.n_heads}
+            cands = [d for d in range(len(shape))
+                     if self._divides(shape[d], self.model_size)]
+            heads = [d for d in cands if shape[d] in head_sizes]
+            pick = heads if heads else cands
+            if pick:
+                # rightmost on ties: heads/feature dims trail batch dims
+                model_dim = max(pick, key=lambda d: (shape[d], d))
+                entries[model_dim] = "model"
+        if self.dp_size > 1:
+            for d in range(len(shape)):
+                if d != model_dim and self._divides(shape[d], self.dp_size):
+                    entries[d] = self._dp_entry()
+                    break
+        return self._named(*entries)
+
+    def cache_shardings(self, cache):
+        return jax.tree.map(self._cache_spec, cache)

@@ -1,7 +1,6 @@
 """jit'd wrapper: model-layout flash attention (GQA folding)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash.flash import flash_attention

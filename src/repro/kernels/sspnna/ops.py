@@ -21,7 +21,8 @@ from repro.kernels.sspnna.ref import sspnna_tile_ref
 from repro.kernels.sspnna.sspnna import sspnna_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
 def sspnna_conv(
     feats: jax.Array,         # (V_in, C) global input features
     weights: jax.Array,       # (K, C, N)

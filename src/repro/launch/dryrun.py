@@ -19,7 +19,6 @@ Usage:
 """
 import argparse
 import dataclasses
-import functools
 import json
 import sys
 import time
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, get_config
 from repro.dist.hints import use_mesh
 from repro.dist.sharding import ShardingRules
+from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import build_roofline
 from repro.launch.shapes import SHAPES, cell_supported, input_specs
@@ -157,7 +157,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     result["compile_s"] = round(time.time() - t0, 1)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis.xla_cost_dict(compiled)
     hlo = compiled.as_text()
     n_dev = mesh.size
     per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
@@ -194,7 +194,6 @@ def main():
     ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
     args = ap.parse_args()
 
-    cells = []
     archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

@@ -419,3 +419,15 @@ class HloAnalyzer:
 
 def analyze(text: str) -> HloCost:
     return HloAnalyzer(text).cost()
+
+
+def xla_cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions.
+
+    jaxlib <= 0.4.x returns a one-element list of dicts (one per program);
+    newer versions return the dict directly. Either way, hand back a dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}

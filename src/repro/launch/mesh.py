@@ -7,18 +7,21 @@ state. Single pod: (16, 16) = 256 chips, axes ("data", "model"); multi-pod:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())
-    data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"model={model} must be a positive divisor of the device count "
+            f"({n}); a silent 0-sized data axis helps nobody")
+    return make_mesh((n // model, model), ("data", "model"))

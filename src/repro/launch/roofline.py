@@ -18,7 +18,7 @@ so the useful-compute ratio flags remat/dispatch waste.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 # --- TPU v5e hardware constants (assignment-provided) ---
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
@@ -156,7 +156,7 @@ def model_flops(cfg, shape_kind: str, batch: int, seq: int) -> float:
         mult = 2.0
     base = mult * n_active * tokens
     # attention score+value flops: 2 * 2 * H * hd * S_eff per token
-    from repro.configs.base import GLOBAL, LOCAL, RGLRU, RWKV
+    from repro.configs.base import GLOBAL, LOCAL
     attn = 0.0
     for i in range(cfg.n_layers):
         kind = cfg.layer_kind(i)

@@ -16,7 +16,6 @@ identical semantics lives in ``repro.kernels.flash``.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -13,23 +13,22 @@ metadata).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import coir as coir_lib
 from repro.core.coir import COIR
 from repro.core.hashgrid import downsample_coords, kernel_offsets
 from repro.core.sparse_conv import (
-    SparseConvParams,
     init_sparse_conv,
     sparse_conv_cirf,
     submanifold_coir,
     transposed_coir,
 )
-from repro.core import coir as coir_lib
 from repro.sparse.tensor import SparseVoxelTensor
 
 
@@ -100,7 +99,8 @@ def init_unet(key: jax.Array, cfg: UNetConfig) -> dict:
             lvl["up"] = init_sparse_conv(next(keys), 8, w[li + 1], w[li], cfg.dtype)
             # decoder blocks see concat(skip, upsampled) = 2*w[li]
             lvl["dec"] = [
-                _block_params(next(keys), 2 * w[li] if r == 0 else w[li], w[li], cfg.dtype)
+                _block_params(next(keys), 2 * w[li] if r == 0 else w[li],
+                              w[li], cfg.dtype)
                 for r in range(cfg.reps)
             ]
         params["levels"].append(lvl)
@@ -165,7 +165,8 @@ def segmentation_loss(logits, labels, mask):
     return loss, acc
 
 
-def miou(pred: np.ndarray, labels: np.ndarray, mask: np.ndarray, n_classes: int) -> float:
+def miou(pred: np.ndarray, labels: np.ndarray, mask: np.ndarray,
+         n_classes: int) -> float:
     pred, labels = np.asarray(pred)[mask], np.asarray(labels)[mask]
     ious = []
     for c in range(n_classes):

@@ -19,13 +19,13 @@ DESIGN.md §5/§6.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GLOBAL, LOCAL, RGLRU, RWKV, ModelConfig
+from repro.dist.hints import DP, constrain
 from repro.models import mlp as mlp_lib
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -34,8 +34,13 @@ from repro.models.attention import (
     chunked_attention,
     decode_attention,
 )
-from repro.dist.hints import DP, constrain
-from repro.models.common import apply_rope, dense_init, rms_norm, softcap, split_keys
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    rms_norm,
+    softcap,
+    split_keys,
+)
 
 
 # ---------------------------------------------------------------------------

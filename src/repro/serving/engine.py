@@ -8,7 +8,6 @@ continuous batching at fixed shapes (slot reuse, no recompilation).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 
 import jax
@@ -19,7 +18,6 @@ from repro.configs.base import ModelConfig
 from repro.models.transformer import (
     decode_step,
     forward,
-    init_decode_cache,
 )
 
 

@@ -50,7 +50,8 @@ class SparseVoxelTensor(NamedTuple):
 MAX_RESOLUTION = 1290  # largest R with R**3 < 2**31 (int32-safe linear keys)
 
 
-def linear_key(coords: jax.Array, resolution: int, mask: jax.Array | None = None) -> jax.Array:
+def linear_key(coords: jax.Array, resolution: int,
+               mask: jax.Array | None = None) -> jax.Array:
     """Linear voxel key; inactive/padding rows map to the largest key.
 
     Keys are strictly monotone in (x, y, z) lexicographic order, so sorted

@@ -45,7 +45,9 @@ def voxelize(
     seg_id = np.repeat(np.arange(n), counts)
     f_sorted = features[order]
     # order was truncated potentially: rebuild the slice covering kept voxels
-    rows = np.concatenate([np.arange(s, s + c) for s, c in zip(start, counts)]) if n else np.zeros(0, np.int64)
+    rows = (np.concatenate([np.arange(s, s + c)
+                            for s, c in zip(start, counts)])
+            if n else np.zeros(0, np.int64))
     sums = np.zeros((n, features.shape[1]), np.float64)
     np.add.at(sums, seg_id, f_sorted[rows])
     feats[:n] = (sums / counts[:, None]).astype(features.dtype)

@@ -100,7 +100,8 @@ def adafactor_update(params, grads, state, step, hp: OptHParams):
             vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
             vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
             denom = jnp.mean(vr, axis=-1, keepdims=True)
-            rms = (vr[..., None] / jnp.maximum(denom[..., None], 1e-30)) * vc[..., None, :]
+            rms = (vr[..., None] / jnp.maximum(denom[..., None], 1e-30)
+                   ) * vc[..., None, :]
             u = g32 * jax.lax.rsqrt(jnp.maximum(rms, 1e-30))
             nv = {"vr": vr, "vc": vc}
         else:

@@ -12,8 +12,6 @@ Optional EF-int8 gradient compression applies to the accumulated gradient
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

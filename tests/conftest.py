@@ -1,3 +1,13 @@
+import os
+
+# Give the suite a few virtual CPU devices so the dist layer (pipeline
+# stages, mesh construction, compressed collectives) is exercised for real.
+# Must be set before the first jax import anywhere in the test session.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + _flags).strip()
+
 import numpy as np
 import pytest
 

@@ -83,7 +83,6 @@ def test_spade_walk_pattern_semantics(shell):
     # WS: weights fetched once; IS: inputs once; OS: outputs once (Eqn 5)
     for wp, idx_term in (("WS", 0), ("IS", 1), ("OS", 2)):
         da, br = spade.data_accesses(layer, attrs, 256, 32, 32, wp, "CIRF")
-        others = [b for i, b in enumerate(br) if i != idx_term]
         base = {0: 64 * 64 * 27,
                 1: attrs.at(256, "sa_minor_avg") * 4096 * 64,
                 2: 4096 * 64 + attrs.at(256, "arf_avg") * 4096}[idx_term]

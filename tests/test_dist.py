@@ -1,0 +1,196 @@
+"""repro.dist: hints are no-ops without a mesh, rules produce valid specs,
+compressed collectives round-trip, pipeline stage lib validates shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist.collectives import compressed_psum, expert_all_to_all
+from repro.dist.compat import make_mesh
+from repro.dist.hints import DP, active_mesh, constrain, use_mesh
+from repro.dist.pipeline import pipeline_apply, stack_stages
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_host_mesh
+from repro.training import grad_compress
+from repro.training.optimizer import OptHParams
+from repro.training.train_loop import init_train_state
+
+
+# ---------------------------------------------------------------- hints
+
+def test_constrain_is_identity_without_mesh(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    assert constrain(x, DP, None, "model") is x
+    assert active_mesh() is None
+
+    @jax.jit
+    def f(x):
+        return constrain(x, DP, "model", None) * 2
+
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x) * 2)
+
+
+def test_use_mesh_sets_and_restores_context():
+    mesh = make_host_mesh()
+    assert active_mesh() is None
+    with use_mesh(mesh, dp=("data",)) as m:
+        assert m is mesh
+        got_mesh, dp = active_mesh()
+        assert got_mesh is mesh and dp == ("data",)
+    assert active_mesh() is None
+    with pytest.raises(ValueError):
+        with use_mesh(mesh, dp=("nonexistent",)):
+            pass
+
+
+def test_constrain_applies_and_drops_indivisible_axes(rng):
+    mesh = make_host_mesh()  # (n_dev, 1): "data" axis only is >1
+    n_data = mesh.shape["data"]
+    if n_data < 2:
+        pytest.skip("needs >=2 devices")
+    with use_mesh(mesh, dp=("data",)):
+        x = jnp.zeros((n_data * 2, 8, 16))
+        spec = constrain(x, DP, None, "model").sharding.spec
+        assert spec[0] == "data"          # divisible batch -> DP sharded
+        assert spec[2] is None            # model axis has size 1 -> dropped
+        y = jnp.zeros((n_data + 1, 8))    # indivisible batch -> unsharded
+        assert constrain(y, DP, None).sharding.spec[0] is None
+
+
+# ------------------------------------------------------------ sharding
+
+def test_sharding_rules_valid_on_host_mesh():
+    cfg = get_config("stablelm-1.6b").reduced()
+    mesh = make_host_mesh()
+    rules = ShardingRules(cfg, mesh)
+    state = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, OptHParams()))
+    sh = rules.state_shardings(state)
+    for s in jax.tree.leaves(sh, is_leaf=lambda lf: hasattr(lf, "spec")):
+        for entry in s.spec:
+            axes = (entry,) if isinstance(entry, str) else (entry or ())
+            assert all(a in mesh.axis_names for a in axes)
+    # shardings are consumable by jit on this mesh
+    params_sh = rules.params_shardings(state["params"])
+    jitted = jax.jit(lambda p: p, in_shardings=(params_sh,))
+    jitted.lower(state["params"]).compile()
+
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (4 * mesh.shape["data"], 65), jnp.int32)}
+    spec = rules.batch_shardings(batch)["tokens"].spec
+    assert spec[0] is not None  # divisible global batch shards over DP
+
+
+def test_sharding_rules_model_axis_and_full_dp():
+    if len(jax.devices()) < 2 or len(jax.devices()) % 2:
+        pytest.skip("needs an even device count")
+    cfg = get_config("stablelm-1.6b").reduced()
+    mesh = make_host_mesh(model=2)
+    rules = ShardingRules(cfg, mesh)
+    # 2D weight with a model-divisible last dim -> TP on the last dim
+    w = jax.ShapeDtypeStruct((cfg.d_model, cfg.d_ff), jnp.float32)
+    assert rules.params_shardings(w).spec == ("model",) or \
+        rules.params_shardings(w).spec[-1] == "model"
+    # stacked per-cycle leaf never shards the leading scan axis
+    stacked = jax.ShapeDtypeStruct((4, cfg.d_model, cfg.d_ff), jnp.float32)
+    assert rules.params_shardings(stacked).spec[0] is None
+    # KV cache prefers the kv-heads dim for the model axis, batch for DP
+    kv = jax.ShapeDtypeStruct((mesh.shape["data"] * 2, 64,
+                               cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    spec = rules.cache_shardings(kv).spec
+    assert spec[2] == "model" and spec[0] is not None
+    # batch dim coinciding in size with the kv-head count still picks heads
+    kv2 = jax.ShapeDtypeStruct((cfg.n_kv_heads, 64,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    assert rules.cache_shardings(kv2).spec[2] == "model"
+    # full-mesh DP: params replicate, batches shard over every axis
+    full = ShardingRules(cfg, mesh, full_dp=True)
+    assert full.params_shardings(w).spec == ()
+    b = jax.ShapeDtypeStruct((mesh.size * 2, 65), jnp.int32)
+    entry = full.batch_shardings(b).spec[0]
+    assert set((entry,) if isinstance(entry, str) else entry) == \
+        {a for a in mesh.axis_names if mesh.shape[a] > 1}
+
+
+# ---------------------------------------------------------- collectives
+
+def test_compressed_psum_sums_and_bounds_error(rng):
+    n = len(jax.devices())
+    mesh = make_mesh((n,), ("pod",))
+    g = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    out = compressed_psum(mesh, g, axis="pod")
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    # each of the n replicated contributions carries at most one block-scale
+    # of quantization error — the wire-compression ratio costs nothing more
+    assert float(jnp.max(jnp.abs(out["w"] - n * g["w"]))) < n * 1.5 * scale
+    assert grad_compress.compression_ratio(g, 4) > 3.5
+
+
+def test_compressed_psum_error_feedback_converges(rng):
+    mesh = make_mesh((1,), ("pod",))
+    g = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    err = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+    acc = jnp.zeros_like(g["w"])
+    for _ in range(20):
+        out, err = compressed_psum(mesh, g, axis="pod", error_state=err)
+        acc = acc + out["w"]
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    np.testing.assert_allclose(np.asarray(acc / 20), np.asarray(g["w"]),
+                               rtol=0, atol=scale * 1.2)
+
+
+def test_expert_all_to_all_identity_and_roundtrip():
+    m1 = make_mesh((1,), ("model",))
+    x = jnp.arange(2 * 8 * 4 * 3, dtype=jnp.float32).reshape(2, 8, 4, 3)
+    np.testing.assert_array_equal(np.asarray(expert_all_to_all(m1, x)),
+                                  np.asarray(x))
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >=2 devices")
+    mesh = make_mesh((n,), ("model",))
+    t = jnp.arange(n * 8 * 4 * 3, dtype=jnp.float32).reshape(n, 8, 4, 3)
+    fwd = expert_all_to_all(mesh, t)             # group-major -> expert-major
+    back = expert_all_to_all(mesh, fwd, split_axis=0, concat_axis=1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(t))
+
+
+# ------------------------------------------------------------- pipeline
+
+def test_pipeline_validates_stage_count_and_shapes(rng):
+    mesh = make_mesh((1,), ("pipe",))
+    w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    x = jnp.zeros((2, 4, 8))
+    with pytest.raises(ValueError):
+        stack_stages([])
+    with pytest.raises(ValueError):  # 2 stages on a 1-wide pipe axis
+        pipeline_apply(mesh, lambda p, t: t @ p["w"],
+                       stack_stages([{"w": w}, {"w": w}]), x)
+    if len(jax.devices()) >= 2:
+        mesh2 = make_mesh((2,), ("pipe",))
+        wide = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+        with pytest.raises(ValueError):  # stage changes activation shape
+            pipeline_apply(mesh2, lambda p, t: t @ p["w"],
+                           stack_stages([{"w": wide}, {"w": wide}]), x)
+
+
+def test_pipeline_single_stage_allows_shape_change(rng):
+    mesh = make_mesh((1,), ("pipe",))
+    w = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(5, 4, 8)), jnp.float32)
+    out = pipeline_apply(mesh, lambda p, t: t @ p["w"],
+                         stack_stages([{"w": w}]), x)
+    assert out.shape == (5, 4, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w), rtol=1e-5)
+
+
+# ------------------------------------------------------------------ mesh
+
+def test_make_host_mesh_rejects_non_divisor():
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        make_host_mesh(n + 1)
+    with pytest.raises(ValueError):
+        make_host_mesh(0)
+    mesh = make_host_mesh(1)
+    assert mesh.shape["data"] == n and mesh.shape["model"] == 1

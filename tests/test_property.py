@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic local shim
+    from _hypothesis_mini import given, settings, strategies as st
 
 from repro.core.moe_spade import build_dispatch, plan_capacity
 from repro.core.schedule import (
@@ -77,8 +80,9 @@ def test_schedule_conservation_and_bounds(work, cores):
     for fn in (schedule_naive, schedule_round_robin_sorted, schedule_lpt):
         a = fn(w, cores)
         assert np.isclose(a.per_core_work.sum(), w.sum(), rtol=1e-9)
-        assert a.makespan >= w.sum() / cores - 1e-9
-        assert a.makespan >= w.max() - 1e-9
+        # relative tolerance: summation order perturbs large sums at ~1e-16
+        assert a.makespan >= w.sum() / cores * (1 - 1e-9) - 1e-9
+        assert a.makespan >= w.max() * (1 - 1e-9) - 1e-9
         got = np.concatenate([o for o in a.order_within if len(o)])
         assert sorted(got) == list(range(len(w)))
 

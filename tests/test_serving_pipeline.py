@@ -40,14 +40,33 @@ def test_serve_step_greedy_matches_prefill_logits(rng):
 def test_pipeline_parallel_matches_serial():
     if len(jax.devices()) < 2:
         pytest.skip("needs >=2 devices")
+    from repro.dist.compat import make_mesh
+    from repro.dist.pipeline import pipeline_apply, stack_stages
+
+    n_stages = 2
+    mesh = make_mesh((n_stages,), ("pipe",))
+    rng = np.random.default_rng(1)
+    stages = [{"w": jnp.asarray(rng.normal(size=(16, 16)) * 0.3, jnp.float32)}
+              for _ in range(n_stages)]
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    out = pipeline_apply(mesh, stage_fn, stack_stages(stages), x)
+    ref = x
+    for p in stages:
+        ref = stage_fn(p, ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
 
 
 def test_pipeline_parallel_single_device_mesh():
     """GPipe stage lib on a 1-wide pipe mesh == plain serial apply."""
-    from jax.sharding import AxisType
+    from repro.dist.compat import make_mesh
     from repro.dist.pipeline import pipeline_apply, stack_stages
 
-    mesh = jax.make_mesh((1,), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("pipe",))
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.normal(size=(16, 16)) * 0.3, jnp.float32)
 
@@ -63,10 +82,10 @@ def test_pipeline_parallel_single_device_mesh():
 
 
 def test_compressed_psum_single_device():
-    from jax.sharding import AxisType
     from repro.dist.collectives import compressed_psum
+    from repro.dist.compat import make_mesh
 
-    mesh = jax.make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(300,)),
                           jnp.float32)}
     out = compressed_psum(mesh, g, axis="pod")

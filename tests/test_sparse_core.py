@@ -101,7 +101,8 @@ def test_strided_and_transposed_conv(rng, scene):
     exp = np.zeros((10, 10, 10, 6), np.float32)
     occ_o = np.zeros((10, 10, 10), bool)
     for ki, (dx, dy, dz) in enumerate(offs):
-        exp += dense[dx::2, dy::2, dz::2].astype(np.float32) @ np.asarray(p_dn.weight)[ki]
+        exp += (dense[dx::2, dy::2, dz::2].astype(np.float32)
+                @ np.asarray(p_dn.weight)[ki])
         occ_o |= occ[dx::2, dy::2, dz::2]
     exp = (exp + np.asarray(p_dn.bias)) * occ_o[..., None]
     np.testing.assert_allclose(to_dense(down, 10), exp, rtol=1e-4, atol=1e-4)

@@ -1,6 +1,5 @@
 """Training loop, optimizers, gradient compression, checkpoint/elastic."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,7 @@ def test_checkpoint_roundtrip_and_resume(small_setup, tmp_path):
     cfg, hp, state, _ = small_setup
     ds = TokenStream(cfg.vocab_size, 4, 16, 9)
     next(ds)
-    path = checkpoint.save(state, str(tmp_path), 7, data_state=ds.state())
+    checkpoint.save(state, str(tmp_path), 7, data_state=ds.state())
     assert checkpoint.latest_step(str(tmp_path)) == 7
     restored, man = checkpoint.restore(str(tmp_path), 7, state)
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
@@ -114,7 +113,7 @@ def test_checkpoint_roundtrip_and_resume(small_setup, tmp_path):
 
 def test_checkpoint_async_and_atomic(small_setup, tmp_path):
     cfg, hp, state, _ = small_setup
-    th = checkpoint.save_async(state, str(tmp_path), 3)
+    checkpoint.save_async(state, str(tmp_path), 3)
     checkpoint.wait_for_saves()
     assert checkpoint.latest_step(str(tmp_path)) == 3
     # no .tmp leftovers
