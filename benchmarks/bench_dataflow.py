@@ -12,10 +12,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import build_scene, emit, scene_metadata, time_fn
+from repro import engine
 from repro.core import carom, soar, spade
-from repro.core.sparse_conv import init_sparse_conv, sparse_conv_cirf
-from repro.core.tiles import build_tile_plan
-from repro.kernels.sspnna.ops import sspnna_conv_from_plan
+from repro.core.sparse_conv import init_sparse_conv
 
 
 def run():
@@ -60,17 +59,21 @@ def run():
     emit("fig22/offline_vs_jsa", 0.0,
          f"{plan_off.da_elems / best_soar.da_elems:.3f}x DA of input-specific")
 
-    # Fig 24 analogue: measured wall time, reference conv vs tiled path
+    # Fig 24 analogue: measured wall time of both engine backends on the
+    # same SPADE-planned conv (one ConvPlan, two `backend=` forcings)
     params = init_sparse_conv(jax.random.PRNGKey(0), 27, 4, 32)
-    ref_fn = jax.jit(lambda f: sparse_conv_cirf(f, coir, params))
+    conv_plan = engine.conv_plan_for_layer(
+        coir, order.order, best_soar.delta_major,
+        int(best_soar.delta_major
+            * attrs_soar.at(best_soar.delta_major, "sa_minor_alloc_rst")) + 27,
+        walk=best_soar.walk)
+    ref_fn = jax.jit(lambda f: engine.sparse_conv(
+        f, params, conv_plan, backend="reference"))
     us_ref = time_fn(ref_fn, t.feats)
-    plan = build_tile_plan(idx, order.order, best_soar.delta_major,
-                           int(best_soar.delta_major
-                               * attrs_soar.at(best_soar.delta_major,
-                                               "sa_minor_alloc_rst")) + 27)
-    tiled_fn = jax.jit(lambda f: sspnna_conv_from_plan(
-        f, params.weight, plan, n_out=t.capacity, use_kernel=False))
+    tiled_fn = jax.jit(lambda f: engine.sparse_conv(
+        f, params, conv_plan, backend="sspnna", use_kernel=False))
     us_tiled = time_fn(tiled_fn, t.feats)
-    emit("fig24/ref_conv", us_ref, "XLA gather-einsum, untiled")
+    emit("fig24/ref_conv", us_ref, "engine backend=reference (XLA einsum)")
     emit("fig24/spade_tiled_conv", us_tiled,
-         f"{us_ref / us_tiled:.2f}x vs ref (CPU wall; tiles={plan.n_tiles})")
+         f"{us_ref / us_tiled:.2f}x vs ref (CPU wall; "
+         f"tiles={conv_plan.dispatch.n_tiles})")

@@ -3,18 +3,27 @@
 Measures, across skewed router-load distributions: dropped-token fraction
 and dispatch-tensor waste for (a) fixed capacity factor 1.25, (b) SST
 (max-load allocation), (c) RST at the paper's 90-quantile.
+
+Also compares the two ``apply_moe`` dispatch modes head-to-head: the
+collective-free group-local gather vs the expert-major all-to-all
+(``dist.collectives.expert_all_to_all``) — wall-clock and max numeric
+difference, on a mesh over all local devices (the a2a degenerates to the
+identity on one device).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
 from repro.core.moe_spade import (
     build_dispatch,
     expert_load_stats,
     plan_capacity,
 )
+from repro.dist.compat import make_mesh
+from repro.models.moe import apply_moe, init_moe, moe_capacity
 
 
 def run():
@@ -37,3 +46,24 @@ def run():
             waste = 1.0 - float(jnp.sum(table >= 0)) / (n_experts * cap)
             emit(f"moe_spade/{name}/{mode}", 0.0,
                  f"cap={cap} dropped={dropped:.3f} slot_waste={waste:.3f}")
+
+    # gather vs a2a dispatch (ROADMAP hillclimb arm)
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev,), ("model",))
+    g, tg, d, topk = n_dev, 512 // n_dev, 64, 2
+    e = 8 if 8 % n_dev == 0 else 8 * n_dev  # a2a splits E over the mesh
+    params = init_moe(jax.random.PRNGKey(0), d, 4 * d, e, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(g, tg, d)), jnp.float32)
+    cap = moe_capacity(tg, topk, e, 1.25)
+    gather_fn = jax.jit(lambda p, xx: apply_moe(
+        p, xx, top_k=topk, capacity=cap, act="swiglu")[0])
+    a2a_fn = jax.jit(lambda p, xx: apply_moe(
+        p, xx, top_k=topk, capacity=cap, act="swiglu",
+        mesh=mesh, dispatch="a2a")[0])
+    us_gather = time_fn(gather_fn, params, x)
+    us_a2a = time_fn(a2a_fn, params, x)
+    diff = float(jnp.max(jnp.abs(gather_fn(params, x) - a2a_fn(params, x))))
+    emit("moe_dispatch/gather", us_gather,
+         f"group-local gather, G={g} E={e} cap={cap} ndev={n_dev}")
+    emit("moe_dispatch/a2a", us_a2a,
+         f"{us_gather / us_a2a:.2f}x vs gather, max|diff|={diff:.1e}")

@@ -5,15 +5,16 @@ split, Fig 4 analogue) and the AccSS3D speedup *model*: DA-bound latency of
 the baseline weight-stationary rulebook dataflow vs the SPADE-tiled COIR
 dataflow, at the paper's 64 KB L1 / 1 GHz operating point. Modeled numbers
 are labeled as such — wall-clock speedups of the paper's ASIC cannot be
-measured here.
+measured here. Level metadata comes from the engine's plan builder.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import build_scene, emit
+from repro import engine
 from repro.core import spade
-from repro.models.scn import UNetConfig, build_unet_metadata
+from repro.models.scn import UNetConfig
 
 
 def run():
@@ -21,19 +22,20 @@ def run():
     t, _ = build_scene(5, res, cap)
     cfg = UNetConfig(widths=(16, 32, 48), reps=1, resolution=res,
                      capacity=cap)
-    meta = build_unet_metadata(t, cfg)
+    plan = engine.build_scene_plan(t, cfg, plan_tiles=False)
     total_base = total_opt = 0.0
-    for li, lvl in enumerate(meta):
-        idx = np.asarray(lvl.sub_coir.indices)
+    for li, lvl in enumerate(plan.levels):
+        idx = np.asarray(lvl.sub.coir.indices)
         mask = np.asarray(lvl.mask)
         v = max(int(mask.sum()), 1)
         c = cfg.widths[li]
         attrs = spade.extract_attributes(idx, mask)
         layer = spade.LayerSpec(f"U{li}", v, v, 27, c, c, 2)
         # baseline: weight-stationary rulebook (the SCN reference impl):
-        # inputs+outputs refetched once per weight plane
+        # each of the ARF*V (in, out) pairs refetches its input row and its
+        # output accumulator row once, weights once per plane
         arf = float(attrs.arf_avg[0])
-        da_base = 27 * (v * c * 2) + c * c * 27
+        da_base = arf * v * c * 2 + c * c * 27
         best = spade.explore(layer, {"CIRF": attrs, "CORF": attrs}, 64 * 1024)
         total_base += da_base
         total_opt += best.da_elems

@@ -5,11 +5,14 @@ analytical/model benchmarks; see each module's docstring for the mapping to
 the paper's tables and what is measured vs modeled).
 
 ``--quick`` runs the subset CI uses as a non-blocking smoke (fast modules
-only) so perf scripts cannot silently rot; ``--only`` picks modules by name.
+only) so perf scripts cannot silently rot; ``--only`` picks modules by name;
+``--json PATH`` additionally writes the rows as a JSON artifact (the CI
+smoke job uploads it so the perf trajectory accumulates across commits).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,6 +27,8 @@ def main(argv=None) -> None:
                     help="fast subset (the CI smoke job)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names, e.g. bench_coir")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact (CI perf log)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -57,7 +62,23 @@ def main(argv=None) -> None:
         mod.run()
         print(f"# {mod.__name__} done in {time.time() - mt:.1f}s",
               file=sys.stderr)
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
+
+    if args.json:
+        from benchmarks.common import ROWS
+        payload = {
+            "schema": "bench-rows/v1",
+            "unix_time": int(t0),
+            "total_seconds": round(total_s, 2),
+            "modules": [m.__name__.split(".")[-1] for m in modules],
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Quickstart: the AccSS3D pipeline on one synthetic scene.
 
 pointcloud -> voxelize -> AdMAC adjacency -> SOAR reorder -> COIR metadata
--> SPADE dataflow plan -> SSpNNA Pallas kernel sparse conv.
+-> SPADE dataflow plan -> engine dispatch (reference einsum vs SSpNNA
+Pallas kernel, one ``sparse_conv`` entry point).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,12 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import soar, spade
 from repro.core.hashgrid import build_neighbor_table, kernel_offsets
-from repro.core.sparse_conv import init_sparse_conv, sparse_conv_cirf, submanifold_coir
-from repro.core.tiles import build_tile_plan
+from repro.core.sparse_conv import init_sparse_conv, submanifold_coir
 from repro.data.scenes import make_scene
-from repro.kernels.sspnna.ops import sspnna_conv_from_plan
 from repro.sparse.tensor import SparseVoxelTensor
 
 RES, CAP = 48, 16384
@@ -43,15 +43,17 @@ plan_df = spade.explore(layer, {"CIRF": attrs, "CORF": attrs}, 64 * 1024)
 print(f"SPADE: walk={plan_df.walk} flavor={plan_df.flavor} "
       f"tile dO={plan_df.delta_major} -> {plan_df.da_elems:.2e} data accesses")
 
-# Tiled metadata + SSpNNA kernel
+# Engine: one ConvPlan, two backends through the same entry point
 d_i = int(plan_df.delta_major * attrs.at(plan_df.delta_major,
                                          "sa_minor_alloc_rst")) + 27
-plan = build_tile_plan(np.asarray(coir.indices), order.order,
-                       plan_df.delta_major, d_i)
+conv_plan = engine.conv_plan_for_layer(coir, order.order,
+                                       plan_df.delta_major, d_i,
+                                       walk=plan_df.walk)
 params = init_sparse_conv(jax.random.PRNGKey(0), 27, 4, 32)
-out = sspnna_conv_from_plan(t.feats, params.weight, plan,
-                            n_out=t.capacity, use_kernel=True)
-ref = sparse_conv_cirf(t.feats, coir, params) - params.bias
+out = engine.sparse_conv(t.feats, params, conv_plan, backend="sspnna",
+                         use_kernel=True)
+ref = engine.sparse_conv(t.feats, params, conv_plan, backend="reference")
 err = float(jnp.max(jnp.abs(out[np.asarray(t.mask)] - ref[np.asarray(t.mask)])))
-print(f"SSpNNA kernel over {plan.n_tiles} tiles: max |err| vs reference = {err:.2e}")
+print(f"SSpNNA kernel over {conv_plan.dispatch.n_tiles} tiles: "
+      f"max |err| vs reference = {err:.2e}")
 print("OK")

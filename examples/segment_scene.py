@@ -1,10 +1,12 @@
-"""Batched 3D-segmentation serving with SPADE-planned dataflow.
+"""Batched 3D-segmentation serving through ``repro.engine``.
 
-Serves a stream of pointcloud "requests": per request, run the AdMAC
-metadata pass, OTF-SPADE dataflow lookup (offline table, §V-C), and the
-U-Net forward — the paper's end-to-end inference flow.
+The paper's end-to-end inference flow as a serving loop: representative
+scenes pin the SPADE dataflow decisions once (offline-SPADE, §V-C), then
+``serving.scene_engine.SceneEngine`` serves waves of pointcloud requests —
+per scene one cached AdMAC/SOAR plan build, one shared jit compilation for
+every wave.
 
-Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 4]
+Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 8]
 """
 import argparse
 import time
@@ -13,16 +15,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import spade
-from repro.core.sparse_conv import submanifold_coir
+from repro import engine
 from repro.data.scenes import N_CLASSES, make_scene
-from repro.models.scn import UNetConfig, apply_unet, build_unet_metadata, init_unet
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving.scene_engine import SceneEngine, SceneRequest
 from repro.sparse.tensor import SparseVoxelTensor
+
+
+def load_scene(seed, res, cap):
+    coords, feats, labels, mask = make_scene(seed, res, cap)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--res", type=int, default=32)
     ap.add_argument("--cap", type=int, default=4096)
     args = ap.parse_args()
@@ -31,33 +40,31 @@ def main():
                      capacity=args.cap, n_classes=N_CLASSES)
     params = init_unet(jax.random.PRNGKey(0), cfg)
 
-    # offline-SPADE: precompute the dataflow table once (ARF-binned)
-    coords, feats, labels, mask = make_scene(123, args.res, args.cap)
-    rep = SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
-                            jnp.asarray(mask))
-    coir = submanifold_coir(rep, args.res, 3)
-    attrs = spade.extract_attributes(np.asarray(coir.indices), np.asarray(mask))
-    msa = spade.meta_attributes([attrs])
-    layer = spade.LayerSpec("serve", args.cap, args.cap, 27,
-                            cfg.widths[0], cfg.widths[0], 2)
-    table = spade.build_offline_table([layer], msa, 64 * 1024)
-    print("offline-SPADE table ready")
+    # offline-SPADE: pin the per-level dataflow from representative scenes
+    t0 = time.time()
+    reps = [load_scene(123 + i, args.res, args.cap) for i in range(2)]
+    spec = engine.build_plan_spec(reps, cfg, mem_budget=64 * 1024)
+    for li, d in enumerate(spec.levels):
+        print(f"spec level{li}: {d.backend} walk={d.walk} "
+              f"dO={d.delta_o} dI={d.delta_i} tiles={d.n_tiles}")
+    print(f"plan spec pinned in {time.time() - t0:.1f}s")
 
-    for rid in range(args.requests):
-        t_req = time.time()
-        coords, feats, labels, mask = make_scene(1000 + rid, args.res, args.cap)
-        t = SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
-                              jnp.asarray(mask))
-        meta = build_unet_metadata(t, cfg)         # AdMAC (on-the-fly)
-        arf = float(meta[0].sub_coir.arf())
-        plan = spade.otf_lookup(table, layer, arf)  # OTF-SPADE: table lookup
-        logits = apply_unet(params, t.feats, meta)
-        pred = np.asarray(jnp.argmax(logits, -1))
-        n = int(mask.sum())
-        print(f"req {rid}: {n} voxels, ARF={arf:.1f}, "
-              f"plan(dO={plan.delta_major},{plan.walk},{plan.flavor}), "
-              f"classes={np.bincount(pred[mask], minlength=N_CLASSES).tolist()} "
-              f"({time.time() - t_req:.1f}s)")
+    eng = SceneEngine(cfg, params, batch=args.batch, spec=spec)
+    for wave_start in range(0, args.requests, args.batch):
+        t_wave = time.time()
+        reqs = [SceneRequest(rid, load_scene(1000 + rid, args.res, args.cap))
+                for rid in range(wave_start,
+                                 min(wave_start + args.batch, args.requests))]
+        eng.submit(reqs)
+        eng.run()
+        for r in reqs:
+            n = int(np.asarray(r.scene.mask).sum())
+            hist = np.bincount(r.pred[np.asarray(r.scene.mask)],
+                               minlength=N_CLASSES)
+            print(f"req {r.rid}: {n} voxels, classes={hist.tolist()}")
+        print(f"wave done in {time.time() - t_wave:.1f}s "
+              f"(compilations={eng.n_compilations}, "
+              f"plan cache {eng.cache.hits} hits / {eng.cache.misses} misses)")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ tile plans; this module is also its numerical oracle.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -48,16 +49,44 @@ def gather_partners(feats: jax.Array, coir: COIR) -> jax.Array:
     return jnp.where(coir.valid()[..., None], g, 0)
 
 
-def sparse_conv_cirf(
+def reference_conv_cirf(
     feats_in: jax.Array, coir: COIR, params: SparseConvParams
 ) -> jax.Array:
-    """Out-major (CIRF) evaluation: gather + one fused contraction."""
+    """Out-major (CIRF) evaluation: gather + one fused contraction.
+
+    This is the engine's ``backend="reference"`` implementation and the
+    numerical oracle for the tiled SSpNNA path (``repro.engine.sparse_conv``).
+    """
     g = gather_partners(feats_in, coir)
     out = jnp.einsum(
         "okc,kcn->on", g, params.weight, preferred_element_type=jnp.float32
     ).astype(feats_in.dtype)
     out = out + params.bias.astype(out.dtype)
     return out * coir.mask[:, None].astype(out.dtype)
+
+
+def sparse_conv_cirf(
+    feats_in: jax.Array, coir: COIR, params: SparseConvParams
+) -> jax.Array:
+    """Deprecated: call ``repro.engine.sparse_conv`` with a plan instead."""
+    warnings.warn(
+        "sparse_conv_cirf is deprecated; use repro.engine.sparse_conv with a "
+        "ConvPlan (backend='reference' reproduces these numerics exactly)",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine import api as engine_api  # local: engine imports us
+
+    return engine_api.sparse_conv(
+        feats_in, params, engine_api.reference_plan(coir), backend="reference")
+
+
+def masked_batchnorm_relu(x, mask, scale, offset, eps: float = 1e-5):
+    """BN + ReLU over active rows only (the SCN conv-block epilogue)."""
+    m = mask[:, None].astype(x.dtype)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(x * m, axis=0) / n
+    var = jnp.sum(jnp.square(x - mean) * m, axis=0) / n
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * scale + offset
+    return jax.nn.relu(y) * m
 
 
 def sparse_conv_corf(
@@ -103,7 +132,7 @@ def submanifold_coir(
 def submanifold_conv(
     t: SparseVoxelTensor, coir: COIR, params: SparseConvParams
 ) -> SparseVoxelTensor:
-    return t.replace_feats(sparse_conv_cirf(t.feats, coir, params))
+    return t.replace_feats(reference_conv_cirf(t.feats, coir, params))
 
 
 def strided_conv(
@@ -122,7 +151,7 @@ def strided_conv(
     coir = build_cirf(
         out_coords, out_mask, t.coords, t.mask, offs, resolution, stride
     )
-    feats = sparse_conv_cirf(t.feats, coir, params)
+    feats = reference_conv_cirf(t.feats, coir, params)
     return SparseVoxelTensor(out_coords, feats, out_mask), resolution // stride, coir
 
 
@@ -153,7 +182,7 @@ def transposed_conv(
     fine_mask: jax.Array,
     params: SparseConvParams,
 ) -> SparseVoxelTensor:
-    feats = sparse_conv_cirf(coarse.feats, coir_fine_major, params)
+    feats = reference_conv_cirf(coarse.feats, coir_fine_major, params)
     return SparseVoxelTensor(fine_coords, feats, fine_mask)
 
 
@@ -161,12 +190,8 @@ def batchnorm_relu(
     t: SparseVoxelTensor, scale: jax.Array, offset: jax.Array, eps: float = 1e-5
 ) -> SparseVoxelTensor:
     """Masked batch-norm + ReLU over active voxels only."""
-    m = t.mask[:, None].astype(t.feats.dtype)
-    n = jnp.maximum(jnp.sum(m), 1.0)
-    mean = jnp.sum(t.feats * m, axis=0) / n
-    var = jnp.sum(jnp.square(t.feats - mean) * m, axis=0) / n
-    y = (t.feats - mean) * jax.lax.rsqrt(var + eps) * scale + offset
-    return t.replace_feats(jax.nn.relu(y) * m)
+    return t.replace_feats(
+        masked_batchnorm_relu(t.feats, t.mask, scale, offset, eps))
 
 
 # ---------------------------------------------------------------------------

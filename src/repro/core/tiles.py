@@ -12,6 +12,7 @@ Pallas kernel (``repro.kernels.sspnna``) and by the DMA-table generator.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import numpy as np
@@ -37,37 +38,77 @@ class TilePlan:
         return self.in_rows.shape[1]
 
 
+def max_tiles(n_rows: int, delta_o: int, delta_i: int, kernel_volume: int) -> int:
+    """Upper bound on the tile count of the budgeted (``n_tiles``) planner.
+
+    A tile closes either full-by-rows (at most ceil(n/dO) such tiles) or
+    full-by-inputs, holding more than ``delta_i - K`` unique inputs; since
+    per-tile unique inputs sum to at most ``n_rows * K`` pairs, the second
+    kind is bounded too. Used to pin static shapes for the serving engine.
+    """
+    n = max(n_rows, 1)
+    by_rows = math.ceil(n / delta_o)
+    by_inputs = math.ceil(n * kernel_volume / max(delta_i - kernel_volume + 1, 1))
+    return by_rows + by_inputs + 1
+
+
 def build_tile_plan(
     cirf_indices: np.ndarray,
     order: np.ndarray,
     delta_o: int,
     delta_i: int,
+    n_tiles: int | None = None,
 ) -> TilePlan:
     """Regroup out-major COIR into fixed-shape tile metadata.
 
     cirf_indices: (V, K) global partner indices (-1 holes).
     order: SOAR (or raster) ordering of active output rows.
+    n_tiles: when given, use the budgeted greedy planner — every tile fits
+        ``delta_i`` by construction (close a tile before a row would
+        overflow it) — and pad the tile stack to exactly ``n_tiles`` so the
+        output shapes are scene-independent (serving-engine mode). Raises
+        ``ValueError`` if the scene needs more tiles than that.
     """
     cirf_indices = np.asarray(cirf_indices)
     k = cirf_indices.shape[1]
 
     tiles: list[np.ndarray] = []
 
-    def emit(rows: np.ndarray):
-        """Split until the unique-input working set fits delta_i."""
-        part = cirf_indices[rows]
-        uniq = np.unique(part[part >= 0])
-        if len(uniq) > delta_i and len(rows) > 1:
-            mid = len(rows) // 2
-            emit(rows[:mid])
-            emit(rows[mid:])
-        else:
-            tiles.append(rows)
+    if n_tiles is not None:
+        if delta_i < k:
+            raise ValueError(f"delta_i {delta_i} < kernel volume {k}")
+        cur: list[int] = []
+        cur_uniq: set[int] = set()
+        for r in np.asarray(order, np.int64):
+            part = cirf_indices[r]
+            new = set(part[part >= 0].tolist())
+            if cur and (len(cur) == delta_o or len(cur_uniq | new) > delta_i):
+                tiles.append(np.asarray(cur, np.int64))
+                cur, cur_uniq = [], set()
+            cur.append(int(r))
+            cur_uniq |= new
+        if cur:
+            tiles.append(np.asarray(cur, np.int64))
+        if len(tiles) > n_tiles:
+            raise ValueError(
+                f"scene needs {len(tiles)} tiles > budget {n_tiles} "
+                f"(delta_o={delta_o}, delta_i={delta_i})")
+    else:
+        def emit(rows: np.ndarray):
+            """Split until the unique-input working set fits delta_i."""
+            part = cirf_indices[rows]
+            uniq = np.unique(part[part >= 0])
+            if len(uniq) > delta_i and len(rows) > 1:
+                mid = len(rows) // 2
+                emit(rows[:mid])
+                emit(rows[mid:])
+            else:
+                tiles.append(rows)
 
-    for s in range(0, len(order), delta_o):
-        emit(np.asarray(order[s:s + delta_o], np.int64))
+        for s in range(0, len(order), delta_o):
+            emit(np.asarray(order[s:s + delta_o], np.int64))
 
-    t = len(tiles)
+    t = n_tiles if n_tiles is not None else len(tiles)
     out_rows = np.full((t, delta_o), -1, np.int32)
     in_rows = np.full((t, delta_i), -1, np.int32)
     local_idx = np.full((t, delta_o, k), -1, np.int32)

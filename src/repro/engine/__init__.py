@@ -1,0 +1,56 @@
+"""repro.engine: plan-driven sparse-conv execution.
+
+Build a ``ScenePlan`` once per input scene (COIR + SOAR + SPADE + tiles),
+then run every conv through ``sparse_conv`` / every U-Net through
+``apply_unet`` — the engine dispatches each layer to the reference einsum
+or the tiled SSpNNA Pallas path per the plan.
+"""
+from repro.engine.api import (
+    BACKENDS,
+    apply_unet,
+    conv_block,
+    reference_plan,
+    resolve_backend,
+    sparse_conv,
+)
+from repro.engine.plan import (
+    REFERENCE,
+    SSPNNA,
+    ConvPlan,
+    Dispatch,
+    LevelPlan,
+    PlanCache,
+    PlanSpec,
+    ScenePlan,
+    TileArrays,
+    build_plan_spec,
+    build_scene_plan,
+    conv_plan_for_layer,
+    dispatch_from_dataflow,
+    level_geometry,
+    scene_key,
+)
+
+__all__ = [
+    "BACKENDS",
+    "REFERENCE",
+    "SSPNNA",
+    "ConvPlan",
+    "Dispatch",
+    "LevelPlan",
+    "PlanCache",
+    "PlanSpec",
+    "ScenePlan",
+    "TileArrays",
+    "apply_unet",
+    "build_plan_spec",
+    "build_scene_plan",
+    "conv_block",
+    "conv_plan_for_layer",
+    "dispatch_from_dataflow",
+    "level_geometry",
+    "reference_plan",
+    "resolve_backend",
+    "scene_key",
+    "sparse_conv",
+]

@@ -1,0 +1,114 @@
+"""One plan-driven entry point for sparse convolution.
+
+``sparse_conv(x, params, plan, backend=...)`` is the execution API the rest
+of the repo programs against; the COIR metadata, SOAR ordering, SPADE
+dataflow decision and SSpNNA tile tables all arrive pre-packaged in the
+``ConvPlan`` (see ``repro.engine.plan``), so call sites never re-derive
+them — the paper's co-design, surfaced as one function.
+
+Backend dispatch rules:
+
+* ``"reference"`` — gather + one fused einsum over all weight planes
+  (``core.sparse_conv.reference_conv_cirf``), the coarse M-V dispatch and
+  the numerical oracle.
+* ``"sspnna"`` — the tiled Pallas path (``kernels.sspnna``) driven by the
+  plan's ``TileArrays``. Plans without tile metadata (resolution-changing
+  convs, tile-budget overflows) fall back to reference.
+* ``"auto"`` — follow the SPADE decision recorded in ``plan.dispatch``.
+
+``apply_unet`` runs the whole SCN U-Net off a ``ScenePlan``; it is pure in
+(params, feats, plan) and vmap/jit-friendly — the serving engine batches it
+with a leading scene axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.coir import COIR
+from repro.core.sparse_conv import (
+    SparseConvParams,
+    masked_batchnorm_relu,
+    reference_conv_cirf,
+)
+from repro.engine.plan import (
+    REFERENCE,
+    REFERENCE_DISPATCH,
+    SSPNNA,
+    ConvPlan,
+    ScenePlan,
+)
+from repro.kernels.sspnna.ops import run_sspnna_conv
+
+BACKENDS = ("auto", REFERENCE, SSPNNA)
+
+
+def reference_plan(coir: COIR) -> ConvPlan:
+    """Wrap bare COIR metadata as an einsum-only plan."""
+    return ConvPlan(coir, None, REFERENCE_DISPATCH)
+
+
+def resolve_backend(plan: ConvPlan, backend: str = "auto") -> str:
+    """The backend a call will actually run, after plan-driven dispatch."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not one of {BACKENDS}")
+    if backend == "auto":
+        backend = plan.dispatch.backend
+    if backend == SSPNNA and plan.tiles is None:
+        return REFERENCE
+    return backend
+
+
+def sparse_conv(
+    x: jnp.ndarray,
+    params: SparseConvParams,
+    plan: ConvPlan,
+    *,
+    backend: str = "auto",
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_n: int | None = None,
+) -> jnp.ndarray:
+    """Run one sparse conv according to its plan -> (V_out, N) features."""
+    if resolve_backend(plan, backend) == REFERENCE:
+        return reference_conv_cirf(x, plan.coir, params)
+    raw = run_sspnna_conv(
+        x, params.weight, plan.tiles.out_rows, plan.tiles.in_rows,
+        plan.tiles.local_idx, n_out=plan.coir.mask.shape[0],
+        use_kernel=use_kernel, interpret=interpret, block_n=block_n)
+    out = raw.astype(x.dtype) + params.bias.astype(x.dtype)
+    return out * plan.coir.mask[:, None].astype(out.dtype)
+
+
+def conv_block(x, mask, plan: ConvPlan, p, **conv_kw):
+    """Conv + masked BN + ReLU, the SCN building block."""
+    y = sparse_conv(x, p["conv"], plan, **conv_kw)
+    return masked_batchnorm_relu(y, mask, p["bn_scale"], p["bn_offset"])
+
+
+def apply_unet(
+    params: dict,
+    feats: jnp.ndarray,
+    plan: ScenePlan,
+    *,
+    backend: str = "auto",
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """U-Net forward off a ScenePlan -> (V, n_classes) level-0 logits."""
+    kw = dict(backend=backend, use_kernel=use_kernel, interpret=interpret)
+    x = sparse_conv(feats, params["stem"], plan.levels[0].sub, **kw)
+    skips = []
+    for li, lvl in enumerate(plan.levels):
+        p = params["levels"][li]
+        for blk in p["enc"]:
+            x = conv_block(x, lvl.mask, lvl.sub, blk, **kw)
+        if lvl.down is not None:
+            skips.append(x)
+            x = sparse_conv(x, p["down"], lvl.down, **kw)
+    for li in range(len(plan.levels) - 2, -1, -1):
+        lvl, p = plan.levels[li], params["levels"][li]
+        up = sparse_conv(x, p["up"], lvl.up, **kw)
+        x = jnp.concatenate([skips[li], up], axis=-1)
+        for blk in p["dec"]:
+            x = conv_block(x, lvl.mask, lvl.sub, blk, **kw)
+    return x @ params["head"]["w"] + params["head"]["b"]

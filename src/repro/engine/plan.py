@@ -1,0 +1,394 @@
+"""Scene plans: the engine's unit of metadata building and caching.
+
+A ``ScenePlan`` is everything the paper builds *before* running a layer,
+bundled per input scene: per-level COIR metadata (the AdMAC pass), the SOAR
+permutation, the SPADE-selected dataflow, and the tile metadata the SSpNNA
+kernel consumes. It is a jax pytree — array leaves (COIR blocks, tile
+tables) are traced, while the per-conv ``Dispatch`` decision rides in the
+treedef as static aux data, so forcing a different backend or tile shape is
+a (cached) recompile and everything else is a cache hit.
+
+Two plan-building modes:
+
+* **adaptive** (``spec=None``): full SPADE ``explore`` per level on this
+  scene's own sparsity attributes — the paper's input-specific (JSA) flow.
+  Tile counts match the scene, so plans for different scenes may differ in
+  shape/static signature.
+* **pinned** (``spec=build_plan_spec(...)``): dataflow decisions and tile
+  counts are frozen from representative scenes (the offline/MSA flow,
+  §V-C). Every plan built from one spec shares its jit signature — this is
+  what ``serving.scene_engine`` batches through a single compilation.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spade
+from repro.core.coir import COIR, build_cirf
+from repro.core.hashgrid import downsample_coords, kernel_offsets
+from repro.core.soar import raster_order, soar_order
+from repro.core.sparse_conv import transposed_coir
+from repro.core.tiles import build_tile_plan, max_tiles
+from repro.sparse.tensor import SparseVoxelTensor
+
+REFERENCE = "reference"
+SSPNNA = "sspnna"
+
+_K_SUB = 27  # submanifold 3^3 kernel volume
+
+
+@dataclass(frozen=True)
+class Dispatch:
+    """Static per-conv execution decision (hashable -> jit aux data)."""
+
+    backend: str = REFERENCE
+    flavor: str = "CIRF"
+    walk: str = "OS"
+    delta_o: int = 0
+    delta_i: int = 0
+    n_tiles: int = 0
+
+
+REFERENCE_DISPATCH = Dispatch()
+
+
+class TileArrays(NamedTuple):
+    """Device-side tile metadata (``core.tiles.TilePlan`` as jax arrays)."""
+
+    out_rows: jax.Array   # (T, dO)
+    in_rows: jax.Array    # (T, dI)
+    local_idx: jax.Array  # (T, dO, K)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ConvPlan:
+    """Plan for one conv site: COIR metadata + optional tile metadata."""
+
+    coir: COIR
+    tiles: TileArrays | None = None
+    dispatch: Dispatch = REFERENCE_DISPATCH
+
+    def tree_flatten(self):
+        return (self.coir, self.tiles), self.dispatch
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+
+class LevelPlan(NamedTuple):
+    """One U-Net level: active set + its three conv sites."""
+
+    coords: jax.Array
+    mask: jax.Array
+    sub: ConvPlan           # submanifold 3^3 metadata at this level
+    down: ConvPlan | None   # strided 2^3 s2 conv to the next level
+    up: ConvPlan | None     # transposed conv back to this level
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ScenePlan:
+    """Per-scene execution plan. ``stats`` is host-only diagnostics (ARF,
+    chosen dataflows, tile fill) and is dropped across jit boundaries."""
+
+    levels: tuple[LevelPlan, ...]
+    stats: list[dict] | None = None
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def tree_flatten(self):
+        return (tuple(self.levels),), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(children[0], None)
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """Pinned per-level dispatch decisions: every plan built from one spec
+    has the same treedef and static shapes (one jit signature)."""
+
+    levels: tuple[Dispatch, ...]
+
+
+# ---------------------------------------------------------------------------
+# Scene keys + plan cache
+# ---------------------------------------------------------------------------
+
+def scene_key(t: SparseVoxelTensor, tag: str = "") -> str:
+    """Content hash of a scene's active geometry (features don't change the
+    plan, so they are deliberately excluded)."""
+    h = hashlib.sha1()
+    h.update(np.asarray(t.coords).tobytes())
+    h.update(np.asarray(t.mask).tobytes())
+    h.update(tag.encode())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """LRU cache of ScenePlans keyed by scene content + config name."""
+
+    def __init__(self, capacity: int = 128):
+        self.capacity = capacity
+        self._plans: OrderedDict[str, ScenePlan] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, t: SparseVoxelTensor, cfg, **build_kw) -> ScenePlan:
+        # key on the full config + build mode, not just the scene: the same
+        # geometry under a different config/spec is a different plan
+        tag = f"{cfg!r}|{sorted(build_kw.items())!r}"
+        key = scene_key(t, tag)
+        if key in self._plans:
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return self._plans[key]
+        self.misses += 1
+        plan = build_scene_plan(t, cfg, **build_kw)
+        self._plans[key] = plan
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+# ---------------------------------------------------------------------------
+# Plan building
+# ---------------------------------------------------------------------------
+
+def level_geometry(t: SparseVoxelTensor, cfg) -> list[tuple]:
+    """(coords, mask, resolution) of each U-Net pyramid level.
+
+    ``cfg`` is any UNet-like config exposing ``resolution`` and ``widths``
+    (``models.scn.UNetConfig`` satisfies this; the engine takes the duck
+    type to avoid depending on the model zoo)."""
+    out = []
+    coords, mask, res = t.coords, t.mask, cfg.resolution
+    for li in range(len(cfg.widths)):
+        out.append((coords, mask, res))
+        if li < len(cfg.widths) - 1:
+            coords, mask = downsample_coords(coords, mask, res, 2)
+            res //= 2
+    return out
+
+
+def _order_rows(sub_coir: COIR, coords, mask, how: str, chunk: int) -> np.ndarray:
+    """Ordering of active rows for tiling: SOAR (paper), raster, or active
+    (occupancy order, cheapest)."""
+    mask_np = np.asarray(mask)
+    if how == "soar":
+        # the submanifold CIRF *is* the adjacency map (self at the center)
+        return soar_order(np.asarray(sub_coir.indices), mask_np, chunk).order
+    if how == "raster":
+        return raster_order(np.asarray(coords), mask_np)
+    return np.flatnonzero(mask_np)
+
+
+def dispatch_from_dataflow(
+    df: spade.Dataflow,
+    attrs: spade.SparsityAttributes,
+    n_majors: int,
+    kernel_volume: int = _K_SUB,
+    n_tiles: int | None = None,
+) -> Dispatch:
+    """Map a SPADE dataflow onto an engine backend decision.
+
+    Rules: the tiled SSpNNA path serves out-major (CIRF) plans whose tile
+    height is an actual tiling (``delta_o < n_majors``); everything else —
+    CORF-flavored plans and whole-layer tiles — is the coarse single
+    dispatch, i.e. the reference einsum. ``delta_i`` is sized from the SST
+    allocation attribute so tiles fit without splitting in the common case.
+    """
+    if df.flavor != "CIRF" or df.delta_major >= n_majors:
+        return REFERENCE_DISPATCH
+    d_o = int(df.delta_major)
+    d_i = min(
+        n_majors,
+        int(np.ceil(d_o * attrs.at(d_o, "sa_minor_alloc_sst"))) + kernel_volume,
+    )
+    return Dispatch(SSPNNA, df.flavor, df.walk, d_o, d_i,
+                    n_tiles if n_tiles is not None else 0)
+
+
+def _layer_spec(name: str, v: int, c: int) -> spade.LayerSpec:
+    return spade.LayerSpec(name, v, v, _K_SUB, c, c, 2)
+
+
+def build_plan_spec(
+    scenes: list[SparseVoxelTensor],
+    cfg,
+    *,
+    mem_budget: int = 64 * 1024,
+    order: str = "soar",
+    soar_chunk: int = 512,
+    tile_margin: float = 2.0,
+) -> PlanSpec:
+    """Freeze per-level dispatch decisions from representative scenes.
+
+    The offline-SPADE flow (§V-C): extract sparsity attributes per scene and
+    level, aggregate into meta-attributes (MSA), run the design-space sweep
+    once, and pin the winning dataflow. Tile budgets take the analytic bound
+    capped at ``tile_margin`` times the worst observed count, so per-scene
+    plans keep their static shapes without drowning in padding tiles.
+    """
+    offs3 = jnp.asarray(kernel_offsets(3))
+    n_levels = len(cfg.widths)
+    per_level: list[list[spade.SparsityAttributes]] = [[] for _ in range(n_levels)]
+    observed_tiles: list[int] = [0] * n_levels
+    geo_attrs = []
+    for t in scenes:
+        rows = []
+        for li, (coords, mask, res) in enumerate(level_geometry(t, cfg)):
+            coir = build_cirf(coords, mask, coords, mask, offs3, res)
+            ordering = _order_rows(coir, coords, mask, order, soar_chunk)
+            attrs = spade.extract_attributes(
+                np.asarray(coir.indices), np.asarray(mask), ordering)
+            per_level[li].append(attrs)
+            rows.append((coir, ordering))
+        geo_attrs.append(rows)
+
+    dispatches = []
+    for li in range(n_levels):
+        msa = spade.meta_attributes(per_level[li])
+        layer = _layer_spec(f"level{li}", cfg.capacity, cfg.widths[li])
+        df = spade.explore(layer, {"CIRF": msa, "CORF": msa}, mem_budget)
+        d = dispatch_from_dataflow(df, msa, cfg.capacity)
+        if d.backend == SSPNNA:
+            # worst observed budgeted tile count across the rep scenes
+            for rows in geo_attrs:
+                coir, ordering = rows[li]
+                tp = build_tile_plan(
+                    np.asarray(coir.indices), ordering, d.delta_o, d.delta_i)
+                observed_tiles[li] = max(observed_tiles[li], tp.n_tiles)
+            bound = max_tiles(cfg.capacity, d.delta_o, d.delta_i, _K_SUB)
+            n_tiles = min(bound,
+                          int(np.ceil(tile_margin * observed_tiles[li])) + 2)
+            d = Dispatch(d.backend, d.flavor, d.walk, d.delta_o, d.delta_i,
+                         n_tiles)
+        dispatches.append(d)
+    return PlanSpec(tuple(dispatches))
+
+
+def _tile_arrays(cirf_indices, ordering, dispatch: Dispatch) -> TileArrays | None:
+    """Build fixed-shape tile metadata for one conv; None on budget overflow
+    (callers fall back to the reference dispatch)."""
+    try:
+        tp = build_tile_plan(
+            np.asarray(cirf_indices), ordering, dispatch.delta_o,
+            dispatch.delta_i,
+            n_tiles=dispatch.n_tiles if dispatch.n_tiles else None)
+    except ValueError:
+        return None
+    return TileArrays(jnp.asarray(tp.out_rows), jnp.asarray(tp.in_rows),
+                      jnp.asarray(tp.local_idx))
+
+
+def conv_plan_for_layer(
+    coir: COIR,
+    ordering: np.ndarray,
+    delta_o: int,
+    delta_i: int,
+    *,
+    walk: str = "OS",
+    n_tiles: int | None = None,
+) -> ConvPlan:
+    """Tiled ConvPlan for a standalone conv site (benchmarks / tests)."""
+    tp = build_tile_plan(np.asarray(coir.indices), ordering, delta_o, delta_i,
+                         n_tiles=n_tiles)
+    tiles = TileArrays(jnp.asarray(tp.out_rows), jnp.asarray(tp.in_rows),
+                       jnp.asarray(tp.local_idx))
+    return ConvPlan(coir, tiles,
+                    Dispatch(SSPNNA, "CIRF", walk, delta_o, delta_i,
+                             tp.n_tiles))
+
+
+def build_scene_plan(
+    t: SparseVoxelTensor,
+    cfg,
+    *,
+    spec: PlanSpec | None = None,
+    plan_tiles: bool = True,
+    mem_budget: int = 64 * 1024,
+    order: str = "soar",
+    soar_chunk: int = 512,
+) -> ScenePlan:
+    """One AdMAC + SOAR + SPADE pass -> a ScenePlan for this scene.
+
+    ``plan_tiles=False`` skips ordering/attribute extraction entirely and
+    produces an all-reference plan (metadata identical to the legacy
+    ``models.scn.build_unet_metadata``, at the same cost).
+    """
+    if spec is not None and len(spec.levels) != len(cfg.widths):
+        raise ValueError(
+            f"spec has {len(spec.levels)} levels but cfg has "
+            f"{len(cfg.widths)} — was it built from another config?")
+    offs2 = jnp.asarray(kernel_offsets(2, centered=False))
+    offs3 = jnp.asarray(kernel_offsets(3))
+    geometry = level_geometry(t, cfg)
+    levels: list[LevelPlan] = []
+    stats: list[dict] = []
+    for li, (coords, mask, res) in enumerate(geometry):
+        sub_coir = build_cirf(coords, mask, coords, mask, offs3, res)
+        down = up = None
+        if li < len(cfg.widths) - 1:
+            dn_coords, dn_mask, _ = geometry[li + 1]
+            down_coir = build_cirf(
+                dn_coords, dn_mask, coords, mask, offs2, res, stride=2)
+            coarse = SparseVoxelTensor(
+                dn_coords, jnp.zeros((dn_coords.shape[0], 1)), dn_mask)
+            up_coir = transposed_coir(coarse, coords, mask, res, 2, 2)
+            # resolution-changing convs stay on the coarse single dispatch
+            down = ConvPlan(down_coir)
+            up = ConvPlan(up_coir)
+
+        n_active = int(np.asarray(mask).sum())
+        info: dict = {"level": li, "n_active": n_active}
+        dispatch = REFERENCE_DISPATCH
+        tiles = None
+        if plan_tiles and n_active > 0:
+            if spec is not None:
+                dispatch = spec.levels[li]
+            else:
+                ordering = _order_rows(sub_coir, coords, mask, order, soar_chunk)
+                attrs = spade.extract_attributes(
+                    np.asarray(sub_coir.indices), np.asarray(mask), ordering)
+                layer = _layer_spec(f"level{li}", n_active, cfg.widths[li])
+                df = spade.explore(layer, {"CIRF": attrs, "CORF": attrs},
+                                   mem_budget)
+                dispatch = dispatch_from_dataflow(df, attrs, n_active)
+                info["arf"] = float(attrs.arf_avg[0])
+                info["da_elems"] = df.da_elems
+            if dispatch.backend == SSPNNA:
+                if spec is not None:
+                    ordering = _order_rows(sub_coir, coords, mask, order,
+                                           soar_chunk)
+                tiles = _tile_arrays(sub_coir.indices, ordering, dispatch)
+                if tiles is None:  # tile budget overflow: coarse dispatch
+                    info["tile_overflow"] = True
+                    dispatch = REFERENCE_DISPATCH
+                elif not dispatch.n_tiles:
+                    # adaptive mode: record the realized tile count
+                    dispatch = Dispatch(
+                        dispatch.backend, dispatch.flavor, dispatch.walk,
+                        dispatch.delta_o, dispatch.delta_i,
+                        int(tiles.out_rows.shape[0]))
+        info["dispatch"] = dispatch
+        stats.append(info)
+        levels.append(LevelPlan(coords, mask, ConvPlan(sub_coir, tiles, dispatch),
+                                down, up))
+    return ScenePlan(tuple(levels), stats)

@@ -8,10 +8,16 @@ Implements the full §V-A execution flow on one chip:
 The gather/scatter here are the DMA engines' job in the paper (tables built
 by ``repro.core.tiles.plan_dma_tables``); XLA dynamic-gather performs them,
 and only the compute-dense inner tile runs in Pallas.
+
+``run_sspnna_conv`` is the execution primitive the engine dispatcher
+(``repro.engine.sparse_conv``) drives; ``sspnna_conv`` and
+``sspnna_conv_from_plan`` are the old direct entry points, kept as
+deprecation shims.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +29,7 @@ from repro.kernels.sspnna.sspnna import sspnna_tiles
 
 @functools.partial(
     jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
-def sspnna_conv(
+def run_sspnna_conv(
     feats: jax.Array,         # (V_in, C) global input features
     weights: jax.Array,       # (K, C, N)
     out_rows: jax.Array,      # (T, dO) from TilePlan
@@ -35,7 +41,7 @@ def sspnna_conv(
     interpret: bool = True,
     block_n: int | None = None,
 ) -> jax.Array:
-    """Tiled sparse convolution -> (n_out, N) features."""
+    """Tiled sparse convolution -> (n_out, N) features (no bias/mask)."""
     in_ok = in_rows >= 0
     tile_feats = jnp.take(feats, jnp.maximum(in_rows, 0), axis=0)
     tile_feats = jnp.where(in_ok[..., None], tile_feats, 0)
@@ -56,6 +62,27 @@ def sspnna_conv(
     return out
 
 
+def sspnna_conv(
+    feats: jax.Array,
+    weights: jax.Array,
+    out_rows: jax.Array,
+    in_rows: jax.Array,
+    local_idx: jax.Array,
+    *,
+    n_out: int,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Deprecated: call ``repro.engine.sparse_conv(backend='sspnna')``."""
+    warnings.warn(
+        "sspnna_conv is deprecated; route through repro.engine.sparse_conv "
+        "with a tiled ConvPlan instead", DeprecationWarning, stacklevel=2)
+    return run_sspnna_conv(
+        feats, weights, out_rows, in_rows, local_idx, n_out=n_out,
+        use_kernel=use_kernel, interpret=interpret, block_n=block_n)
+
+
 def sspnna_conv_from_plan(
     feats: jax.Array,
     weights: jax.Array,
@@ -66,7 +93,12 @@ def sspnna_conv_from_plan(
     interpret: bool = True,
     block_n: int | None = None,
 ) -> jax.Array:
-    return sspnna_conv(
+    """Deprecated: call ``repro.engine.sparse_conv(backend='sspnna')``."""
+    warnings.warn(
+        "sspnna_conv_from_plan is deprecated; route through "
+        "repro.engine.sparse_conv with a tiled ConvPlan instead",
+        DeprecationWarning, stacklevel=2)
+    return run_sspnna_conv(
         feats,
         weights,
         jnp.asarray(plan.out_rows),

@@ -10,6 +10,11 @@ The dispatch table is the MoE instance of the paper's metadata structure
 (``repro.core.moe_spade.build_dispatch``), and the capacity is planned with
 the paper's RST quantile rule instead of a fixed factor.
 
+``apply_moe(..., mesh=..., dispatch="a2a")`` switches to the explicit
+expert-major exchange (``dist.collectives.expert_all_to_all`` over the
+mesh's ``"model"`` axis) — numerically identical to the group-local gather,
+compared head-to-head in ``benchmarks/bench_moe.py``.
+
 Load-balance aux loss + router z-loss included (production training).
 """
 from __future__ import annotations
@@ -18,8 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.moe_spade import build_dispatch
+from repro.dist.collectives import expert_all_to_all
 from repro.dist.hints import DP, constrain
 from repro.models.common import dense_init, split_keys
+
+DISPATCH_MODES = ("gather", "a2a")
 
 
 def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str, dtype):
@@ -41,11 +49,20 @@ def moe_capacity(tokens_per_group: int, top_k: int, n_experts: int,
     return max((cap + round_to - 1) // round_to * round_to, round_to)
 
 
-def apply_moe(params, x: jax.Array, *, top_k: int, capacity: int, act: str):
+def apply_moe(params, x: jax.Array, *, top_k: int, capacity: int, act: str,
+              mesh=None, dispatch: str = "gather"):
     """x: (G, Tg, d) -> (out (G, Tg, d), aux dict).
 
     G = token groups (== data shards), Tg tokens per group.
+    dispatch: "gather" (default) keeps the collective-free group-local
+    gather; "a2a" exchanges the dispatch tensor expert-major over ``mesh``'s
+    ``"model"`` axis before the expert GEMMs and inverts afterwards
+    (requires G and E divisible by the axis size; identity on 1 device).
     """
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(f"dispatch {dispatch!r} not one of {DISPATCH_MODES}")
+    if dispatch == "a2a" and mesh is None:
+        raise ValueError("dispatch='a2a' needs a mesh with a 'model' axis")
     g_, tg, d = x.shape
     n_experts = params["router"].shape[1]
     logits = (x.astype(jnp.float32) @ params["router"])  # (G, Tg, E)
@@ -65,7 +82,12 @@ def apply_moe(params, x: jax.Array, *, top_k: int, capacity: int, act: str):
         x[:, None], gather_idx[..., None], axis=2
     )  # x (G,1,Tg,d) gathered along Tg by (G,E,cap,1) -> (G,E,cap,d)
     xin = jnp.where(tok_ok[..., None], xin, 0)
-    xin = constrain(xin, DP, "model", None, None)  # EP: experts on model
+    if dispatch == "a2a":
+        # expert-major exchange: each device ends up holding every group's
+        # tokens for its local experts (global values unchanged)
+        xin = expert_all_to_all(mesh, xin, split_axis=1, concat_axis=0)
+    else:
+        xin = constrain(xin, DP, "model", None, None)  # EP: experts on model
 
     if act in ("swiglu", "geglu"):
         a = jnp.einsum("gecd,edf->gecf", xin, params["w_gate"],
@@ -82,7 +104,11 @@ def apply_moe(params, x: jax.Array, *, top_k: int, capacity: int, act: str):
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
     # Combine: per assignment j, token t reads h[idx[t,j], slot[t,j]].
-    h = constrain(h, DP, "model", None, None)
+    if dispatch == "a2a":
+        # inverse exchange: back to group-major for the combine gather
+        h = expert_all_to_all(mesh, h, split_axis=0, concat_axis=1)
+    else:
+        h = constrain(h, DP, "model", None, None)
     flat = h.reshape(g_, n_experts * capacity, d)
     lin = idx * capacity + jnp.maximum(slot, 0)           # (G, Tg, k)
     picked = jnp.take_along_axis(

@@ -5,14 +5,15 @@ sparse voxel grid — submanifold 3^3 conv blocks at each level, 2^3-stride-2
 convs down, transposed convs back up with skip concatenation, and a linear
 classifier over active voxels.
 
-Metadata (COIR per level + level active sets) is built once per input by
-``build_unet_metadata`` — the AdMAC pass — and reused by every conv at that
-level, which is exactly the paper's motivation for amortizing adjacency
-construction. ``apply_unet`` is a pure jittable function of (params, feats,
-metadata).
+Execution lives in ``repro.engine``: build a ``ScenePlan`` once per input
+(``engine.build_scene_plan`` — the AdMAC + SOAR + SPADE pass) and run
+``engine.apply_unet(params, feats, plan)``. This module keeps the model
+definition (config, parameter init, losses) plus deprecation shims for the
+pre-engine entry points ``build_unet_metadata`` / ``apply_unet``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 
@@ -20,15 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coir as coir_lib
+from repro import engine
 from repro.core.coir import COIR
-from repro.core.hashgrid import downsample_coords, kernel_offsets
-from repro.core.sparse_conv import (
-    init_sparse_conv,
-    sparse_conv_cirf,
-    submanifold_coir,
-    transposed_coir,
-)
+from repro.core.sparse_conv import init_sparse_conv
 from repro.sparse.tensor import SparseVoxelTensor
 
 
@@ -49,6 +44,8 @@ class UNetConfig:
 
 
 class LevelMeta(NamedTuple):
+    """Pre-engine per-level metadata bundle (kept for the shims)."""
+
     coords: jax.Array
     mask: jax.Array
     sub_coir: COIR          # submanifold 3^3 metadata at this level
@@ -56,30 +53,43 @@ class LevelMeta(NamedTuple):
     up_coir: COIR | None    # transposed conv back to this level
 
 
+def meta_to_plan(meta: list[LevelMeta]) -> engine.ScenePlan:
+    """Adapt legacy LevelMeta lists to an (all-reference) engine ScenePlan."""
+    levels = tuple(
+        engine.LevelPlan(
+            m.coords, m.mask, engine.ConvPlan(m.sub_coir),
+            engine.ConvPlan(m.down_coir) if m.down_coir is not None else None,
+            engine.ConvPlan(m.up_coir) if m.up_coir is not None else None,
+        )
+        for m in meta
+    )
+    return engine.ScenePlan(levels)
+
+
 def build_unet_metadata(t: SparseVoxelTensor, cfg: UNetConfig) -> list[LevelMeta]:
-    """One AdMAC pass per level: active sets + all COIR blocks."""
-    levels: list[LevelMeta] = []
-    coords, mask = t.coords, t.mask
-    res = cfg.resolution
-    offs2 = jnp.asarray(kernel_offsets(2, centered=False))
-    for li in range(cfg.n_levels):
-        cur = SparseVoxelTensor(coords, jnp.zeros((coords.shape[0], 1)), mask)
-        sub = submanifold_coir(cur, res, 3)
-        down = up = None
-        if li < cfg.n_levels - 1:
-            dn_coords, dn_mask = downsample_coords(coords, mask, res, 2)
-            down = coir_lib.build_cirf(
-                dn_coords, dn_mask, coords, mask, offs2, res, stride=2
-            )
-            coarse = SparseVoxelTensor(
-                dn_coords, jnp.zeros((dn_coords.shape[0], 1)), dn_mask
-            )
-            up = transposed_coir(coarse, coords, mask, res, 2, 2)
-            levels.append(LevelMeta(coords, mask, sub, down, up))
-            coords, mask, res = dn_coords, dn_mask, res // 2
-        else:
-            levels.append(LevelMeta(coords, mask, sub, None, None))
-    return levels
+    """Deprecated: use ``repro.engine.build_scene_plan`` (same AdMAC pass,
+    plus SOAR/SPADE planning when requested)."""
+    warnings.warn(
+        "build_unet_metadata is deprecated; use repro.engine.build_scene_plan",
+        DeprecationWarning, stacklevel=2)
+    plan = engine.build_scene_plan(t, cfg, plan_tiles=False)
+    return [
+        LevelMeta(lvl.coords, lvl.mask, lvl.sub.coir,
+                  lvl.down.coir if lvl.down is not None else None,
+                  lvl.up.coir if lvl.up is not None else None)
+        for lvl in plan.levels
+    ]
+
+
+def apply_unet(params: dict, feats: jax.Array,
+               meta: "list[LevelMeta] | engine.ScenePlan") -> jax.Array:
+    """Deprecated: use ``repro.engine.apply_unet`` with a ScenePlan."""
+    warnings.warn(
+        "models.scn.apply_unet is deprecated; use repro.engine.apply_unet",
+        DeprecationWarning, stacklevel=2)
+    plan = meta if isinstance(meta, engine.ScenePlan) else meta_to_plan(meta)
+    # the pre-engine semantics were the reference einsum on every layer
+    return engine.apply_unet(params, feats, plan, backend="reference")
 
 
 def init_unet(key: jax.Array, cfg: UNetConfig) -> dict:
@@ -119,40 +129,6 @@ def _block_params(key, c_in, c_out, dtype):
         "bn_scale": jnp.ones((c_out,), dtype),
         "bn_offset": jnp.zeros((c_out,), dtype),
     }
-
-
-def _bn_relu(x, mask, scale, offset, eps=1e-5):
-    m = mask[:, None].astype(x.dtype)
-    n = jnp.maximum(jnp.sum(m), 1.0)
-    mean = jnp.sum(x * m, axis=0) / n
-    var = jnp.sum(jnp.square(x - mean) * m, axis=0) / n
-    y = (x - mean) * jax.lax.rsqrt(var + eps) * scale + offset
-    return jax.nn.relu(y) * m
-
-
-def _block(x, mask, coir, p):
-    y = sparse_conv_cirf(x, coir, p["conv"])
-    return _bn_relu(y, mask, p["bn_scale"], p["bn_offset"])
-
-
-def apply_unet(params: dict, feats: jax.Array, meta: list[LevelMeta]) -> jax.Array:
-    """-> (V, n_classes) logits on the level-0 active set."""
-    x = sparse_conv_cirf(feats, meta[0].sub_coir, params["stem"])
-    skips = []
-    for li, lvl in enumerate(meta):
-        p = params["levels"][li]
-        for blk in p["enc"]:
-            x = _block(x, lvl.mask, lvl.sub_coir, blk)
-        if lvl.down_coir is not None:
-            skips.append(x)
-            x = sparse_conv_cirf(x, lvl.down_coir, p["down"])
-    for li in range(len(meta) - 2, -1, -1):
-        lvl, p = meta[li], params["levels"][li]
-        up = sparse_conv_cirf(x, lvl.up_coir, p["up"])
-        x = jnp.concatenate([skips[li], up], axis=-1)
-        for blk in p["dec"]:
-            x = _block(x, lvl.mask, lvl.sub_coir, blk)
-    return x @ params["head"]["w"] + params["head"]["b"]
 
 
 def segmentation_loss(logits, labels, mask):

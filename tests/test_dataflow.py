@@ -135,3 +135,17 @@ def test_schedulers():
     t_paper = schedule.phase_overlap_makespan(paper, work, xfer, 1.0, 10.0)
     t_naive = schedule.phase_overlap_makespan(naive, work, xfer, 1.0, 10.0)
     assert t_paper <= t_naive * 1.05
+
+
+def test_soar_sa_alloc_no_worse_than_random(shell):
+    """Integration: SOAR ordering gives SPADE an SA_I allocation no worse
+    than a random permutation at every region size (locality -> smaller
+    unique-input working sets, Fig 15/23)."""
+    t, nbr, idx = shell
+    mask = np.asarray(t.mask)
+    res = soar.soar_order(nbr, mask, 256)
+    rand = np.random.default_rng(11).permutation(np.flatnonzero(mask))
+    a_soar = spade.extract_attributes(idx, mask, res.order)
+    a_rand = spade.extract_attributes(idx, mask, rand)
+    assert np.all(a_soar.sa_minor_alloc_sst <= a_rand.sa_minor_alloc_sst + 1e-9)
+    assert np.all(a_soar.sa_minor_avg <= a_rand.sa_minor_avg + 1e-9)

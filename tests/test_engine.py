@@ -1,0 +1,150 @@
+"""repro.engine: plan building, backend dispatch, shims, batched serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data.scenes import N_CLASSES, make_scene
+from repro.models import scn
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.sparse.tensor import SparseVoxelTensor
+
+RES, CAP = 24, 2048
+# small L1 budget so SPADE picks an actual tiling (sspnna) on these scenes
+BUDGET = 16 * 1024
+
+
+def _scene(seed):
+    coords, feats, labels, mask = make_scene(seed, resolution=RES, capacity=CAP)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    t = _scene(0)
+    plan = engine.build_scene_plan(t, cfg, mem_budget=BUDGET)
+    return cfg, params, t, plan
+
+
+def test_backends_agree_on_unet(setup):
+    cfg, params, t, plan = setup
+    # the plan must actually exercise the tiled path for this to mean much
+    assert any(lvl.sub.tiles is not None for lvl in plan.levels)
+    ref = engine.apply_unet(params, t.feats, plan, backend="reference")
+    ssp = engine.apply_unet(params, t.feats, plan, backend="sspnna",
+                            use_kernel=True)
+    m = np.asarray(t.mask)
+    np.testing.assert_allclose(np.asarray(ref)[m], np.asarray(ssp)[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_follows_spade_plan(setup):
+    cfg, params, t, plan = setup
+    for lvl in plan.levels:
+        assert engine.resolve_backend(lvl.sub, "auto") == lvl.sub.dispatch.backend
+        # resolution-changing convs stay on the coarse reference dispatch
+        for cp in (lvl.down, lvl.up):
+            if cp is not None:
+                assert engine.resolve_backend(cp, "auto") == engine.REFERENCE
+    auto = engine.apply_unet(params, t.feats, plan, backend="auto",
+                             use_kernel=False)
+    ref = engine.apply_unet(params, t.feats, plan, backend="reference")
+    m = np.asarray(t.mask)
+    np.testing.assert_allclose(np.asarray(auto)[m], np.asarray(ref)[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_single_conv_pallas_backend_agrees(setup):
+    cfg, params, t, plan = setup
+    lvl0 = plan.levels[0]
+    assert lvl0.sub.dispatch.backend == engine.SSPNNA
+    ref = engine.sparse_conv(t.feats, params["stem"], lvl0.sub,
+                             backend="reference")
+    ssp = engine.sparse_conv(t.feats, params["stem"], lvl0.sub,
+                             backend="sspnna", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ssp),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        engine.sparse_conv(t.feats, params["stem"], lvl0.sub, backend="bogus")
+
+
+def test_plan_cache_hits_by_scene_content(setup):
+    cfg, params, t, plan = setup
+    cache = engine.PlanCache(capacity=4)
+    p1 = cache.get_or_build(t, cfg, plan_tiles=False)
+    p2 = cache.get_or_build(_scene(0), cfg, plan_tiles=False)  # same content
+    assert p1 is p2 and cache.hits == 1 and cache.misses == 1
+    cache.get_or_build(_scene(1), cfg, plan_tiles=False)
+    assert cache.misses == 2
+
+
+def test_deprecated_shims_numerically_identical(setup):
+    cfg, params, t, plan = setup
+    with pytest.warns(DeprecationWarning):
+        meta = scn.build_unet_metadata(t, cfg)
+    with pytest.warns(DeprecationWarning):
+        old = scn.apply_unet(params, t.feats, meta)
+    new = engine.apply_unet(
+        params, t.feats, engine.build_scene_plan(t, cfg, plan_tiles=False),
+        backend="reference")
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    from repro.core.sparse_conv import reference_conv_cirf, sparse_conv_cirf
+    with pytest.warns(DeprecationWarning):
+        old_conv = sparse_conv_cirf(t.feats, plan.levels[0].sub.coir,
+                                    params["stem"])
+    np.testing.assert_array_equal(
+        np.asarray(old_conv),
+        np.asarray(reference_conv_cirf(t.feats, plan.levels[0].sub.coir,
+                                       params["stem"])))
+
+    from repro.core.tiles import build_tile_plan
+    from repro.kernels.sspnna.ops import sspnna_conv_from_plan
+    lvl0 = plan.levels[0]
+    tp = build_tile_plan(np.asarray(lvl0.sub.coir.indices),
+                         np.flatnonzero(np.asarray(t.mask)), 64, 256)
+    with pytest.warns(DeprecationWarning):
+        old_tiled = sspnna_conv_from_plan(
+            t.feats, params["stem"].weight, tp, n_out=CAP, use_kernel=False)
+    ref = np.asarray(reference_conv_cirf(t.feats, lvl0.sub.coir,
+                                         params["stem"]))
+    got = np.asarray(old_tiled) + np.asarray(params["stem"].bias)
+    m = np.asarray(t.mask)
+    np.testing.assert_allclose(got[m], ref[m], rtol=1e-4, atol=1e-4)
+
+
+def test_scene_engine_serves_batches_with_one_compilation():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    spec = engine.build_plan_spec([_scene(100), _scene(101)], cfg,
+                                  mem_budget=BUDGET)
+    assert any(d.backend == engine.SSPNNA for d in spec.levels)
+    eng = SceneEngine(cfg, params, batch=4, spec=spec, use_kernel=False)
+    scenes = [_scene(200 + i) for i in range(6)]
+    eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes[:4])])
+    eng.run()
+    eng.submit([SceneRequest(4 + i, s) for i, s in enumerate(scenes[4:])])
+    eng.run()  # short wave: exercises padding
+    assert eng.n_compilations == 1
+    assert len(eng.completed) == 6
+    for r in eng.completed:
+        assert r.logits.shape == (CAP, N_CLASSES)
+        assert not np.any(np.isnan(r.logits))
+    # batched result == single-scene engine apply off the cached plan
+    r0 = eng.completed[0]
+    plan0 = eng.cache.get_or_build(r0.scene, cfg, spec=spec)
+    single = engine.apply_unet(params, r0.scene.feats, plan0,
+                               use_kernel=False)
+    np.testing.assert_allclose(r0.logits, np.asarray(single),
+                               rtol=1e-5, atol=1e-5)
+    # resubmitting a known scene hits the plan cache and the jit cache
+    eng.submit([SceneRequest(99, scenes[0])])
+    eng.run()
+    assert eng.cache.hits >= 1 and eng.n_compilations == 1

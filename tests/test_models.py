@@ -94,3 +94,26 @@ def test_moe_aux_losses_present(rng):
     _, _, aux = forward(params, cfg, toks, mode="train")
     assert {"moe_lb_loss", "moe_z_loss", "moe_dropped"} <= set(aux)
     assert float(aux["moe_lb_loss"]) > 0
+
+
+def test_moe_a2a_dispatch_matches_gather(rng):
+    """The a2a exchange is a layout permutation: numerics must be identical
+    to the collective-free group-local gather (ROADMAP hillclimb arm)."""
+    from repro.dist.compat import make_mesh
+    from repro.models.moe import apply_moe, init_moe
+
+    n = len(jax.devices())  # 4 virtual CPU devices (conftest)
+    mesh = make_mesh((n,), ("model",))
+    e = 8 if 8 % n == 0 else 8 * n
+    params = init_moe(jax.random.PRNGKey(0), 32, 64, e, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, 64, 32)), jnp.float32)
+    out_g, aux_g = apply_moe(params, x, top_k=2, capacity=24, act="swiglu")
+    out_a, aux_a = apply_moe(params, x, top_k=2, capacity=24, act="swiglu",
+                             mesh=mesh, dispatch="a2a")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_a),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux_g["moe_dropped"]),
+                               float(aux_a["moe_dropped"]))
+    with pytest.raises(ValueError):
+        apply_moe(params, x, top_k=2, capacity=24, act="swiglu",
+                  dispatch="a2a")  # a2a without a mesh

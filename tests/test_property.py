@@ -113,3 +113,27 @@ def test_lm_loss_matches_reference(vocab_mult, seq, seed):
         jax.nn.log_softmax(logits, -1), tgt[..., None], -1))
     got = lm_loss(logits, tgt, cfg)
     np.testing.assert_allclose(float(got), float(ref), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(8, 28), st.integers(2, 96), st.integers(0, 2**31 - 1))
+def test_soar_order_is_chunked_permutation(res, chunk, seed):
+    """SOAR output is a permutation of the active set, partitioned into
+    contiguous chunks of positive size bounded by the chunk budget."""
+    from repro.core.hashgrid import build_neighbor_table, kernel_offsets
+    from repro.core.soar import soar_order
+
+    rng = np.random.default_rng(seed)
+    coords = np.unique(
+        rng.integers(0, res, (150, 3)).astype(np.int32), axis=0)
+    mask = rng.random(len(coords)) < 0.8
+    nbr = np.asarray(build_neighbor_table(
+        jnp.asarray(coords), jnp.asarray(mask),
+        jnp.asarray(kernel_offsets(3)), int(res)))
+    r = soar_order(nbr, mask, chunk)
+    active = np.flatnonzero(mask)
+    assert sorted(r.order) == sorted(active)
+    starts = r.chunk_starts
+    assert starts[0] == 0 and starts[-1] == len(r.order)
+    sizes = np.diff(starts)
+    assert np.all(sizes > 0) and np.all(sizes <= chunk)
