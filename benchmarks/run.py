@@ -16,7 +16,9 @@ import json
 import sys
 import time
 
-# modules cheap enough for the CI smoke job (reduced configs, small scenes)
+# modules cheap enough for the CI smoke job (reduced configs, small scenes).
+# bench_serving is smoked separately (its own --quick CLI writes
+# BENCH_serving.json) so it isn't duplicated here.
 QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
          "bench_dataflow")
 
@@ -38,12 +40,13 @@ def main(argv=None) -> None:
         bench_lm,
         bench_moe,
         bench_scn,
+        bench_serving,
         bench_soar,
         bench_spade_attrs,
     )
 
     modules = [bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
-               bench_dataflow, bench_scn, bench_moe, bench_lm]
+               bench_dataflow, bench_scn, bench_serving, bench_moe, bench_lm]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in modules}

@@ -4,9 +4,11 @@ The paper's end-to-end inference flow as a serving loop: representative
 scenes pin the SPADE dataflow decisions once (offline-SPADE, §V-C), then
 ``serving.scene_engine.SceneEngine`` serves waves of pointcloud requests —
 per scene one cached AdMAC/SOAR plan build, one shared jit compilation for
-every wave.
+every wave. By default the engine runs its async pipeline (plan builds for
+wave k+1 overlap device execution of wave k) and prints the per-stage
+timings; ``--sync`` falls back to the blocking wave loop for comparison.
 
-Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 8]
+Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 8] [--sync]
 """
 import argparse
 import time
@@ -34,6 +36,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--res", type=int, default=32)
     ap.add_argument("--cap", type=int, default=4096)
+    ap.add_argument("--sync", action="store_true",
+                    help="serve with the blocking wave loop instead of the "
+                         "async plan/dispatch/drain pipeline")
+    ap.add_argument("--planner-threads", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=2)
     args = ap.parse_args()
 
     cfg = UNetConfig(widths=(16, 32, 48), reps=1, resolution=args.res,
@@ -49,22 +56,29 @@ def main():
               f"dO={d.delta_o} dI={d.delta_i} tiles={d.n_tiles}")
     print(f"plan spec pinned in {time.time() - t0:.1f}s")
 
-    eng = SceneEngine(cfg, params, batch=args.batch, spec=spec)
-    for wave_start in range(0, args.requests, args.batch):
-        t_wave = time.time()
-        reqs = [SceneRequest(rid, load_scene(1000 + rid, args.res, args.cap))
-                for rid in range(wave_start,
-                                 min(wave_start + args.batch, args.requests))]
-        eng.submit(reqs)
-        eng.run()
-        for r in reqs:
-            n = int(np.asarray(r.scene.mask).sum())
-            hist = np.bincount(r.pred[np.asarray(r.scene.mask)],
-                               minlength=N_CLASSES)
-            print(f"req {r.rid}: {n} voxels, classes={hist.tolist()}")
-        print(f"wave done in {time.time() - t_wave:.1f}s "
-              f"(compilations={eng.n_compilations}, "
-              f"plan cache {eng.cache.hits} hits / {eng.cache.misses} misses)")
+    eng = SceneEngine(cfg, params, batch=args.batch, spec=spec,
+                      sync=args.sync, depth=args.depth,
+                      planner_threads=args.planner_threads)
+    t_serve = time.time()
+    reqs = [SceneRequest(rid, load_scene(1000 + rid, args.res, args.cap))
+            for rid in range(args.requests)]
+    eng.submit(reqs)
+    eng.run()
+    for r in reqs:
+        n = int(np.asarray(r.scene.mask).sum())
+        hist = np.bincount(r.pred[np.asarray(r.scene.mask)],
+                           minlength=N_CLASSES)
+        print(f"req {r.rid}: {n} voxels, classes={hist.tolist()}")
+    tm = eng.timings()
+    mode = "sync" if args.sync else "async"
+    print(f"{mode} serve of {args.requests} reqs in "
+          f"{time.time() - t_serve:.1f}s over {tm['waves']} waves "
+          f"(compilations={eng.n_compilations}, "
+          f"plan cache {eng.cache.hits} hits / {eng.cache.misses} misses)")
+    print(f"pipeline: plan={tm['plan_ms']:.0f}ms "
+          f"(waited {tm['plan_wait_ms']:.0f}ms) "
+          f"device={tm['device_ms']:.0f}ms drain={tm['drain_ms']:.0f}ms "
+          f"overlap_frac={tm['overlap_frac']:.2f}")
 
 
 if __name__ == "__main__":

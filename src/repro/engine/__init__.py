@@ -25,10 +25,12 @@ from repro.engine.plan import (
     TileArrays,
     build_plan_spec,
     build_scene_plan,
+    build_scene_plan_host,
     conv_plan_for_layer,
     dispatch_from_dataflow,
     level_geometry,
     scene_key,
+    upload_scene_plan,
 )
 
 __all__ = [
@@ -45,6 +47,7 @@ __all__ = [
     "apply_unet",
     "build_plan_spec",
     "build_scene_plan",
+    "build_scene_plan_host",
     "conv_block",
     "conv_plan_for_layer",
     "dispatch_from_dataflow",
@@ -53,4 +56,5 @@ __all__ = [
     "resolve_backend",
     "scene_key",
     "sparse_conv",
+    "upload_scene_plan",
 ]

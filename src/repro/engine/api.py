@@ -65,7 +65,7 @@ def sparse_conv(
     *,
     backend: str = "auto",
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_n: int | None = None,
 ) -> jnp.ndarray:
     """Run one sparse conv according to its plan -> (V_out, N) features."""
@@ -92,7 +92,7 @@ def apply_unet(
     *,
     backend: str = "auto",
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """U-Net forward off a ScenePlan -> (V, n_classes) level-0 logits."""
     kw = dict(backend=backend, use_kernel=use_kernel, interpret=interpret)

@@ -22,6 +22,7 @@ Two plan-building modes:
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -31,10 +32,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spade
-from repro.core.coir import COIR, build_cirf
-from repro.core.hashgrid import downsample_coords, kernel_offsets
+from repro.core.coir import COIR
+from repro.core.hashgrid import kernel_offsets
+from repro.core.host_meta import (
+    build_cirf_np,
+    downsample_coords_np,
+    transposed_coir_np,
+)
 from repro.core.soar import raster_order, soar_order
-from repro.core.sparse_conv import transposed_coir
 from repro.core.tiles import build_tile_plan, max_tiles
 from repro.sparse.tensor import SparseVoxelTensor
 
@@ -139,29 +144,108 @@ def scene_key(t: SparseVoxelTensor, tag: str = "") -> str:
 
 
 class PlanCache:
-    """LRU cache of ScenePlans keyed by scene content + config name."""
+    """Thread-safe LRU cache of ScenePlans keyed by scene content + config.
+
+    Concurrent ``get_or_build`` calls for the same scene coalesce: the first
+    caller builds (outside the lock), everyone else waits on a per-key event
+    and returns the same plan object. Each entry holds the host-side plan
+    (numpy leaves, what planner threads produce) and a lazily uploaded
+    device copy — ``device=True`` (the default) returns the device plan,
+    ``device=False`` the host plan, so an async pipeline can run the heavy
+    numpy pass in a worker thread and defer the upload to dispatch time.
+
+    If a build raises, the key is released and every waiter retries the
+    build itself (raising the same error for deterministic failures) — a
+    poisoned scene never wedges the cache.
+    """
 
     def __init__(self, capacity: int = 128):
         self.capacity = capacity
-        self._plans: OrderedDict[str, ScenePlan] = OrderedDict()
+        self._plans: OrderedDict[str, dict] = OrderedDict()
+        self._building: dict[str, threading.Event] = {}
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def get_or_build(self, t: SparseVoxelTensor, cfg, **build_kw) -> ScenePlan:
-        # key on the full config + build mode, not just the scene: the same
-        # geometry under a different config/spec is a different plan
+    @staticmethod
+    def _resolve(entry: dict, device: bool) -> ScenePlan:
+        """Host plan, or the memoized device upload (done outside the global
+        lock so planner threads never stall behind an upload)."""
+        if not device:
+            return entry["host"]
+        if entry["device"] is None:
+            with entry["dev_lock"]:
+                if entry["device"] is None:
+                    entry["device"] = upload_scene_plan(entry["host"])
+        return entry["device"]
+
+    def key_for(self, t: SparseVoxelTensor, cfg, **build_kw) -> str:
+        """Cache key for scene ``t`` under ``cfg`` + build mode: the same
+        geometry under a different config/spec is a different plan. The key
+        is an O(V) content hash — callers on a hot path should compute it
+        once and pass it back via ``key=``."""
         tag = f"{cfg!r}|{sorted(build_kw.items())!r}"
-        key = scene_key(t, tag)
-        if key in self._plans:
-            self.hits += 1
-            self._plans.move_to_end(key)
-            return self._plans[key]
-        self.misses += 1
-        plan = build_scene_plan(t, cfg, **build_kw)
-        self._plans[key] = plan
-        while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
-        return plan
+        return scene_key(t, tag)
+
+    def get_or_build(self, t: SparseVoxelTensor, cfg, *, device: bool = True,
+                     key: str | None = None, **build_kw) -> ScenePlan:
+        """Return the plan for scene ``t`` under ``cfg``, building at most
+        once across threads (concurrent callers for the same key coalesce
+        onto one build). ``key`` skips re-hashing when the caller already
+        holds ``key_for(t, cfg, **build_kw)``."""
+        if key is None:
+            key = self.key_for(t, cfg, **build_kw)
+        while True:
+            with self._lock:
+                entry = self._plans.get(key)
+                if entry is not None:
+                    self.hits += 1
+                    self._plans.move_to_end(key)
+                else:
+                    ev = self._building.get(key)
+                    if ev is None:  # this thread builds
+                        ev = threading.Event()
+                        self._building[key] = ev
+                        break
+            if entry is not None:
+                return self._resolve(entry, device)
+            ev.wait()  # another thread is building this plan; re-check
+        try:
+            host = build_scene_plan_host(t, cfg, **build_kw)
+        except BaseException:
+            with self._lock:
+                self._building.pop(key, None)
+            ev.set()
+            raise
+        entry = {"host": host, "device": None, "dev_lock": threading.Lock()}
+        with self._lock:
+            self.misses += 1
+            self._plans[key] = entry
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+            self._building.pop(key, None)
+            ev.set()
+        return self._resolve(entry, device)
+
+    def adopt(self, key: str, host_plan: ScenePlan, *,
+              device: bool = True) -> ScenePlan:
+        """Fetch the cache entry at ``key`` (from ``key_for``) for an
+        already-built host plan, re-inserting ``host_plan`` if the entry was
+        evicted in the meantime — never rebuilds, never re-hashes, never
+        counts. This is the dispatch-stage path: the plan stage built (and
+        counted) the plan; dispatch just needs the memoized device copy even
+        if LRU pressure evicted the entry between stages."""
+        with self._lock:
+            entry = self._plans.get(key)
+            if entry is not None:
+                self._plans.move_to_end(key)
+            else:
+                entry = {"host": host_plan, "device": None,
+                         "dev_lock": threading.Lock()}
+                self._plans[key] = entry
+                while len(self._plans) > self.capacity:
+                    self._plans.popitem(last=False)
+        return self._resolve(entry, device)
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -172,17 +256,18 @@ class PlanCache:
 # ---------------------------------------------------------------------------
 
 def level_geometry(t: SparseVoxelTensor, cfg) -> list[tuple]:
-    """(coords, mask, resolution) of each U-Net pyramid level.
+    """(coords, mask, resolution) of each U-Net pyramid level, as numpy.
 
     ``cfg`` is any UNet-like config exposing ``resolution`` and ``widths``
     (``models.scn.UNetConfig`` satisfies this; the engine takes the duck
-    type to avoid depending on the model zoo)."""
+    type to avoid depending on the model zoo). Runs entirely on the host —
+    part of the plan pass an async pipeline keeps off the device."""
     out = []
-    coords, mask, res = t.coords, t.mask, cfg.resolution
+    coords, mask, res = np.asarray(t.coords), np.asarray(t.mask), cfg.resolution
     for li in range(len(cfg.widths)):
         out.append((coords, mask, res))
         if li < len(cfg.widths) - 1:
-            coords, mask = downsample_coords(coords, mask, res, 2)
+            coords, mask = downsample_coords_np(coords, mask, res, 2)
             res //= 2
     return out
 
@@ -246,7 +331,7 @@ def build_plan_spec(
     capped at ``tile_margin`` times the worst observed count, so per-scene
     plans keep their static shapes without drowning in padding tiles.
     """
-    offs3 = jnp.asarray(kernel_offsets(3))
+    offs3 = kernel_offsets(3)
     n_levels = len(cfg.widths)
     per_level: list[list[spade.SparsityAttributes]] = [[] for _ in range(n_levels)]
     observed_tiles: list[int] = [0] * n_levels
@@ -254,7 +339,7 @@ def build_plan_spec(
     for t in scenes:
         rows = []
         for li, (coords, mask, res) in enumerate(level_geometry(t, cfg)):
-            coir = build_cirf(coords, mask, coords, mask, offs3, res)
+            coir = build_cirf_np(coords, mask, coords, mask, offs3, res)
             ordering = _order_rows(coir, coords, mask, order, soar_chunk)
             attrs = spade.extract_attributes(
                 np.asarray(coir.indices), np.asarray(mask), ordering)
@@ -294,8 +379,8 @@ def _tile_arrays(cirf_indices, ordering, dispatch: Dispatch) -> TileArrays | Non
             n_tiles=dispatch.n_tiles if dispatch.n_tiles else None)
     except ValueError:
         return None
-    return TileArrays(jnp.asarray(tp.out_rows), jnp.asarray(tp.in_rows),
-                      jnp.asarray(tp.local_idx))
+    return TileArrays(np.asarray(tp.out_rows), np.asarray(tp.in_rows),
+                      np.asarray(tp.local_idx))
 
 
 def conv_plan_for_layer(
@@ -317,6 +402,44 @@ def conv_plan_for_layer(
                              tp.n_tiles))
 
 
+def _map_leaves(plan: ScenePlan, convert) -> ScenePlan:
+    """Apply ``convert`` to every array leaf, preserving host-only stats."""
+    out = jax.tree.map(convert, plan)
+    return ScenePlan(out.levels, plan.stats)
+
+
+def upload_scene_plan(plan: ScenePlan) -> ScenePlan:
+    """Device-upload step: host (numpy) plan leaves -> jax arrays.
+
+    The only part of plan building that touches the device; everything
+    upstream (``build_scene_plan_host``) is host work, so an async serving
+    pipeline can build plans in worker threads and upload at dispatch time.
+    """
+    return _map_leaves(plan, jnp.asarray)
+
+
+def build_scene_plan_host(
+    t: SparseVoxelTensor,
+    cfg,
+    *,
+    spec: PlanSpec | None = None,
+    plan_tiles: bool = True,
+    mem_budget: int = 64 * 1024,
+    order: str = "soar",
+    soar_chunk: int = 512,
+) -> ScenePlan:
+    """Host half of ``build_scene_plan``: all array leaves are numpy.
+
+    This is the paper's offline pass (AdMAC metadata + SOAR reordering +
+    SPADE selection + tile tables) with the device upload factored out —
+    pair with ``upload_scene_plan``. Safe to call from planner threads.
+    """
+    plan = _build_scene_plan(t, cfg, spec=spec, plan_tiles=plan_tiles,
+                             mem_budget=mem_budget, order=order,
+                             soar_chunk=soar_chunk)
+    return _map_leaves(plan, np.asarray)
+
+
 def build_scene_plan(
     t: SparseVoxelTensor,
     cfg,
@@ -327,31 +450,46 @@ def build_scene_plan(
     order: str = "soar",
     soar_chunk: int = 512,
 ) -> ScenePlan:
-    """One AdMAC + SOAR + SPADE pass -> a ScenePlan for this scene.
+    """One AdMAC + SOAR + SPADE pass -> a device-ready ScenePlan.
 
     ``plan_tiles=False`` skips ordering/attribute extraction entirely and
     produces an all-reference plan (metadata identical to the legacy
-    ``models.scn.build_unet_metadata``, at the same cost).
+    ``models.scn.build_unet_metadata``, at the same cost). Composition of
+    ``build_scene_plan_host`` (numpy) + ``upload_scene_plan`` (device).
     """
+    return upload_scene_plan(build_scene_plan_host(
+        t, cfg, spec=spec, plan_tiles=plan_tiles, mem_budget=mem_budget,
+        order=order, soar_chunk=soar_chunk))
+
+
+def _build_scene_plan(
+    t: SparseVoxelTensor,
+    cfg,
+    *,
+    spec: PlanSpec | None = None,
+    plan_tiles: bool = True,
+    mem_budget: int = 64 * 1024,
+    order: str = "soar",
+    soar_chunk: int = 512,
+) -> ScenePlan:
     if spec is not None and len(spec.levels) != len(cfg.widths):
         raise ValueError(
             f"spec has {len(spec.levels)} levels but cfg has "
             f"{len(cfg.widths)} — was it built from another config?")
-    offs2 = jnp.asarray(kernel_offsets(2, centered=False))
-    offs3 = jnp.asarray(kernel_offsets(3))
+    offs2 = kernel_offsets(2, centered=False)
+    offs3 = kernel_offsets(3)
     geometry = level_geometry(t, cfg)
     levels: list[LevelPlan] = []
     stats: list[dict] = []
     for li, (coords, mask, res) in enumerate(geometry):
-        sub_coir = build_cirf(coords, mask, coords, mask, offs3, res)
+        sub_coir = build_cirf_np(coords, mask, coords, mask, offs3, res)
         down = up = None
         if li < len(cfg.widths) - 1:
             dn_coords, dn_mask, _ = geometry[li + 1]
-            down_coir = build_cirf(
+            down_coir = build_cirf_np(
                 dn_coords, dn_mask, coords, mask, offs2, res, stride=2)
-            coarse = SparseVoxelTensor(
-                dn_coords, jnp.zeros((dn_coords.shape[0], 1)), dn_mask)
-            up_coir = transposed_coir(coarse, coords, mask, res, 2, 2)
+            up_coir = transposed_coir_np(dn_coords, dn_mask, coords, mask,
+                                         res, 2, 2)
             # resolution-changing convs stay on the coarse single dispatch
             down = ConvPlan(down_coir)
             up = ConvPlan(up_coir)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -81,11 +83,6 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                     / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
-                     "interpret"),
-)
 def flash_attention(
     q: jax.Array,   # (BH, Sq, D)
     k: jax.Array,   # (BH, Skv, D)
@@ -96,7 +93,31 @@ def flash_attention(
     softcap: float | None = None,
     block_q: int = 128,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    # resolve before the jit boundary: the cache keys on the concrete mode
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q,
+                            block_kv=block_kv,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"),
+)
+def _flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    block_q: int,
+    block_kv: int,
+    interpret: bool,
 ) -> jax.Array:
     bh, sq, d = q.shape
     skv = k.shape[1]

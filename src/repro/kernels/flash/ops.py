@@ -7,7 +7,7 @@ from repro.kernels.flash.flash import flash_attention
 
 
 def flash_attention_bshd(q, k, v, *, causal=True, window=None, softcap=None,
-                         block_q=128, block_kv=128, interpret=True):
+                         block_q=128, block_kv=128, interpret=None):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
 
     GQA: q heads are grouped per kv head; k/v are repeated group-wise by

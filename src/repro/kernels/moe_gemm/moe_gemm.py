@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, valid_ref, o_ref):
     x = x_ref[0]                    # (C, d)
@@ -28,14 +30,27 @@ def _kernel(x_ref, w_ref, valid_ref, o_ref):
     ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
 def grouped_gemm(
     xin: jax.Array,    # (E, C, d)
     w: jax.Array,      # (E, d, f)
     valid: jax.Array,  # (E, C) bool
     *,
     block_f: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    # resolve before the jit boundary: the cache keys on the concrete mode
+    return _grouped_gemm(xin, w, valid, block_f=block_f,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def _grouped_gemm(
+    xin: jax.Array,
+    w: jax.Array,
+    valid: jax.Array,
+    *,
+    block_f: int | None,
+    interpret: bool,
 ) -> jax.Array:
     e, c, d = xin.shape
     f = w.shape[2]

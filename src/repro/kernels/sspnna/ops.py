@@ -23,12 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tiles import TilePlan
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.sspnna.ref import sspnna_tile_ref
 from repro.kernels.sspnna.sspnna import sspnna_tiles
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
 def run_sspnna_conv(
     feats: jax.Array,         # (V_in, C) global input features
     weights: jax.Array,       # (K, C, N)
@@ -38,10 +37,36 @@ def run_sspnna_conv(
     *,
     n_out: int,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_n: int | None = None,
 ) -> jax.Array:
-    """Tiled sparse convolution -> (n_out, N) features (no bias/mask)."""
+    """Tiled sparse convolution -> (n_out, N) features (no bias/mask).
+
+    ``interpret`` resolves *before* the jit boundary (see
+    ``kernels.runtime.resolve_interpret``) so direct calls honor late
+    backend/env changes by retracing. Callers that wrap this in their own
+    long-lived jit (e.g. the serving engines) capture the mode at their
+    first trace — pass ``interpret=`` explicitly there instead."""
+    return _run_sspnna_conv(
+        feats, weights, out_rows, in_rows, local_idx, n_out=n_out,
+        use_kernel=use_kernel, interpret=resolve_interpret(interpret),
+        block_n=block_n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "use_kernel", "interpret", "block_n"))
+def _run_sspnna_conv(
+    feats: jax.Array,
+    weights: jax.Array,
+    out_rows: jax.Array,
+    in_rows: jax.Array,
+    local_idx: jax.Array,
+    *,
+    n_out: int,
+    use_kernel: bool,
+    interpret: bool,
+    block_n: int | None,
+) -> jax.Array:
     in_ok = in_rows >= 0
     tile_feats = jnp.take(feats, jnp.maximum(in_rows, 0), axis=0)
     tile_feats = jnp.where(in_ok[..., None], tile_feats, 0)
@@ -71,7 +96,7 @@ def sspnna_conv(
     *,
     n_out: int,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_n: int | None = None,
 ) -> jax.Array:
     """Deprecated: call ``repro.engine.sparse_conv(backend='sspnna')``."""
@@ -90,7 +115,7 @@ def sspnna_conv_from_plan(
     *,
     n_out: int,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_n: int | None = None,
 ) -> jax.Array:
     """Deprecated: call ``repro.engine.sparse_conv(backend='sspnna')``."""

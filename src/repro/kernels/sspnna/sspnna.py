@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(feats_ref, idx_ref, w_ref, out_ref, *, n_planes: int):
     feats = feats_ref[0]          # (dI, C)
@@ -51,16 +53,32 @@ def _kernel(feats_ref, idx_ref, w_ref, out_ref, *, n_planes: int):
     out_ref[0] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sspnna_tiles(
     feats: jax.Array,      # (T, dI, C)
     local_idx: jax.Array,  # (T, dO, K)
     weights: jax.Array,    # (K, C, N)
     *,
     block_n: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Run the SSpNNA kernel over a stack of tiles -> (T, dO, N)."""
+    """Run the SSpNNA kernel over a stack of tiles -> (T, dO, N).
+
+    ``interpret`` resolves *before* the jit boundary so the cache is keyed
+    on the concrete mode (late env-var changes retrace instead of being
+    silently ignored)."""
+    return _sspnna_tiles(feats, local_idx, weights, block_n=block_n,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _sspnna_tiles(
+    feats: jax.Array,
+    local_idx: jax.Array,
+    weights: jax.Array,
+    *,
+    block_n: int | None,
+    interpret: bool,
+) -> jax.Array:
     t, d_i, c = feats.shape
     _, d_o, k = local_idx.shape
     n = weights.shape[2]

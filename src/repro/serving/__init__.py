@@ -1,0 +1,11 @@
+"""Serving stack: the shared wave scheduler + the LM and 3D scene engines.
+
+``serving.scheduler.WaveScheduler`` owns queueing, wave admission, the
+async plan/dispatch/drain pipeline and per-wave timing; ``serving.engine``
+(LM prefill+decode) and ``serving.scene_engine`` (batched sparse-conv
+U-Net) plug their stage callbacks into it. The engine submodules are
+imported lazily by callers to keep ``import repro.serving`` light.
+"""
+from repro.serving.scheduler import WaveScheduler, WaveStats
+
+__all__ = ["WaveScheduler", "WaveStats"]

@@ -2,9 +2,20 @@
 
 ``make_prefill``/``make_serve_step`` are the jit-able pure steps the
 dry-run lowers (decode_* / long_* cells lower ``serve_step``). ``Engine``
-is a small host-side driver used by the examples: it packs requests into a
-fixed batch, prefills, decodes until EOS/max-tokens, and refills slots —
-continuous batching at fixed shapes (slot reuse, no recompilation).
+is the host-side driver used by the examples, built on the same
+``serving.scheduler.WaveScheduler`` as the 3D scene engine — one shared
+queueing/batching/pipelining core for both modalities:
+
+* **plan** — pack each prompt into its fixed-length slot row (host numpy,
+  planner threads);
+* **dispatch** — prefill + ``max_new`` greedy decode steps, all enqueued
+  without host syncs (the emitted tokens stay on device);
+* **drain** — one readback of the wave's token block, then per-request EOS
+  truncation on the host.
+
+``sync=False`` pipelines the stages (wave *k+1* packs while wave *k*
+decodes); results are identical in both modes because EOS handling happens
+entirely at drain time.
 """
 from __future__ import annotations
 
@@ -19,6 +30,7 @@ from repro.models.transformer import (
     decode_step,
     forward,
 )
+from repro.serving.scheduler import WaveScheduler, WaveStats
 
 
 def make_prefill(cfg: ModelConfig, cache_pad: int = 0):
@@ -58,40 +70,87 @@ class Engine:
     """Host-side continuous-batching driver (fixed shapes)."""
 
     def __init__(self, cfg: ModelConfig, params, batch: int, prompt_len: int,
-                 max_new: int, eos: int | None = None):
+                 max_new: int, eos: int | None = None, *,
+                 sync: bool = True, depth: int = 2,
+                 planner_threads: int = 2):
         self.cfg, self.params = cfg, params
         self.batch, self.prompt_len, self.max_new = batch, prompt_len, max_new
         self.eos = eos
         self.prefill = jax.jit(make_prefill(cfg, cache_pad=max_new))
         self.step = jax.jit(make_serve_step(cfg))
-        self.queue: list[Request] = []
-        self.completed: list[Request] = []
+        self.scheduler = WaveScheduler(
+            batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
+            drain=self._drain_stage, sync=sync, depth=depth,
+            planner_threads=planner_threads)
 
-    def submit(self, reqs: list[Request]):
-        self.queue.extend(reqs)
+    @property
+    def queue(self):
+        return self.scheduler.queue
 
-    def run(self):
-        while self.queue:
-            active = [self.queue.pop(0) for _ in
-                      range(min(self.batch, len(self.queue)))]
-            toks = np.zeros((self.batch, self.prompt_len), np.int32)
-            for i, r in enumerate(active):
-                toks[i, -len(r.prompt):] = r.prompt[: self.prompt_len]
-            last_logits, cache = self.prefill(self.params, jnp.asarray(toks))
-            tok = jnp.argmax(last_logits[:, : self.cfg.vocab_size], -1)
-            tok = tok.astype(jnp.int32)[:, None]
-            for _ in range(self.max_new):
-                for i, r in enumerate(active):
-                    if not r.done:
-                        t = int(tok[i, 0])
-                        r.out.append(t)
-                        if self.eos is not None and t == self.eos:
-                            r.done = True
-                nxt, _, cache = self.step(self.params, tok, cache)
-                tok = nxt[:, None]
-                if all(r.done for r in active):
+    @property
+    def completed(self) -> list[Request]:
+        return self.scheduler.completed
+
+    @property
+    def wave_stats(self) -> list[WaveStats]:
+        return self.scheduler.stats
+
+    def timings(self) -> dict:
+        return self.scheduler.timings()
+
+    # -- pipeline stages -----------------------------------------------------
+
+    def _plan_stage(self, req: Request) -> np.ndarray:
+        """Pack one prompt into its fixed-length slot row (host work)."""
+        row = np.zeros((self.prompt_len,), np.int32)
+        prompt = np.asarray(req.prompt)[: self.prompt_len]
+        if len(prompt):
+            row[-len(prompt):] = prompt
+        return row
+
+    def _dispatch_stage(self, reqs: list[Request], rows) -> jax.Array:
+        if self.max_new < 1:
+            return jnp.zeros((self.batch, 0), jnp.int32)
+        toks = np.zeros((self.batch, self.prompt_len), np.int32)
+        for i, row in enumerate(rows):
+            toks[i] = row
+        last_logits, cache = self.prefill(self.params, jnp.asarray(toks))
+        tok = jnp.argmax(last_logits[:, : self.cfg.vocab_size], -1)
+        tok = tok.astype(jnp.int32)[:, None]
+        # early EOS exit needs a host sync per step, which would stall the
+        # async pipeline — only the blocking mode pays for it (and wins the
+        # old run()'s short-circuit back)
+        check_eos = self.eos is not None and self.scheduler.running_sync
+        done = [False] * len(reqs)
+        emitted = [tok]
+        for _ in range(self.max_new - 1):
+            if check_eos:
+                for i in range(len(reqs)):
+                    done[i] = done[i] or int(tok[i, 0]) == self.eos
+                if all(done):
                     break
-            for r in active:
-                r.done = True
-                self.completed.append(r)
-        return self.completed
+            nxt, _, cache = self.step(self.params, tok, cache)
+            tok = nxt[:, None]
+            emitted.append(tok)
+        return jnp.concatenate(emitted, axis=1)  # (batch, <=max_new), device
+
+    def _drain_stage(self, reqs: list[Request], emitted) -> None:
+        emitted = np.asarray(emitted)
+        for i, r in enumerate(reqs):
+            for t in emitted[i]:
+                r.out.append(int(t))
+                if self.eos is not None and int(t) == self.eos:
+                    break
+            r.done = True
+
+    # -- driver API ----------------------------------------------------------
+
+    def submit(self, reqs: list[Request]) -> None:
+        self.scheduler.submit(reqs)
+
+    def run(self, sync: bool | None = None) -> list[Request]:
+        return self.scheduler.run(sync=sync)
+
+    def close(self) -> None:
+        """Release the planner thread pool (engine stays usable)."""
+        self.scheduler.close()

@@ -1,12 +1,25 @@
 """Batched 3D-scene serving: fixed-capacity slots, cached plans, one jit.
 
-The 3D analogue of ``serving.engine``'s continuous-batching LM driver: the
-host packs up to ``batch`` scene requests per wave, builds (or cache-hits)
-each scene's ``ScenePlan``, stacks the plans along a leading scene axis and
-runs one jitted vmapped U-Net forward. All shapes are static — scene
-capacity is fixed, and a pinned ``PlanSpec`` freezes the SPADE dispatch
-decisions and tile counts — so every wave after the first is a jit cache
-hit (``n_compilations`` stays 1).
+The 3D face of the shared ``serving.scheduler.WaveScheduler``: the host
+packs up to ``batch`` scene requests per wave, builds (or cache-hits) each
+scene's ``ScenePlan``, stacks the plans along a leading scene axis and runs
+one jitted vmapped U-Net forward. All shapes are static — scene capacity is
+fixed, and a pinned ``PlanSpec`` freezes the SPADE dispatch decisions and
+tile counts — so every wave after the first is a jit cache hit
+(``n_compilations`` stays 1).
+
+Stage split (the paper's offline-pass/execution overlap, served):
+
+* **plan** — ``PlanCache.get_or_build(device=False)``: the AdMAC + SOAR +
+  SPADE numpy pass, run on planner threads up to ``depth`` waves ahead;
+* **dispatch** — fetch the (memoized) device upload of each plan, stack the
+  wave, enqueue the jitted forward without blocking;
+* **drain** — block on the previous wave's logits and fill the requests.
+
+``sync=True`` (default) runs the same stages back-to-back — bitwise
+identical results, no overlap; ``sync=False`` pipelines them and reports
+``plan_ms`` / ``device_ms`` / ``overlap_frac`` per wave via ``wave_stats``
+/ ``timings()``.
 
 Short waves are padded with a copy of the first scene's plan and zero
 features; padding slots are dropped before results are handed back.
@@ -20,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import api as engine_api
-from repro.engine.plan import PlanCache, PlanSpec
+from repro.engine.plan import PlanCache, PlanSpec, ScenePlan
+from repro.serving.scheduler import WaveScheduler, WaveStats
 from repro.sparse.tensor import SparseVoxelTensor
 
 
@@ -39,28 +53,43 @@ class SceneEngine:
     ``spec=None`` serves every scene on the reference backend (always a
     single jit signature); pass ``spec=build_plan_spec(rep_scenes, cfg)`` to
     serve the SPADE-planned reference/SSpNNA mix at pinned tile shapes.
+    ``sync=False`` turns on the asynchronous wave pipeline: plan building
+    for wave *k+1* overlaps device execution of wave *k* and readback of
+    wave *k−1* (``depth`` device waves in flight, ``planner_threads`` host
+    builders).
     """
 
     def __init__(self, cfg, params, batch: int,
                  spec: PlanSpec | None = None, *,
                  backend: str = "auto", use_kernel: bool = False,
-                 interpret: bool = True, plan_cache_size: int = 128,
-                 order: str = "soar", soar_chunk: int = 512):
+                 interpret: bool | None = None, plan_cache_size: int = 128,
+                 order: str = "soar", soar_chunk: int = 512,
+                 sync: bool = True, depth: int = 2,
+                 planner_threads: int = 2):
         self.cfg, self.params, self.batch, self.spec = cfg, params, batch, spec
         self._plan_kw = dict(spec=spec, plan_tiles=spec is not None,
                              order=order, soar_chunk=soar_chunk)
         self.cache = PlanCache(plan_cache_size)
-        self.queue: list[SceneRequest] = []
-        self.completed: list[SceneRequest] = []
+        self.scheduler = WaveScheduler(
+            batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
+            drain=self._drain_stage, sync=sync, depth=depth,
+            planner_threads=planner_threads)
 
         def batched_apply(params, feats, plans):
+            # feats/plans arrive as length-`batch` lists; stacking inside the
+            # jit keeps dispatch a single async enqueue (no eager per-leaf
+            # stack ops racing the in-flight wave on the device queue)
+            batch_feats = jnp.stack(feats)
+            batch_plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
             return jax.vmap(
                 lambda f, p: engine_api.apply_unet(
                     params, f, p, backend=backend, use_kernel=use_kernel,
                     interpret=interpret)
-            )(feats, plans)
+            )(batch_feats, batch_plan)
 
         self._apply = jax.jit(batched_apply)
+
+    # -- introspection -------------------------------------------------------
 
     @property
     def n_compilations(self) -> int:
@@ -69,37 +98,69 @@ class SceneEngine:
         cache_size = getattr(self._apply, "_cache_size", None)
         return int(cache_size()) if cache_size is not None else -1
 
-    def submit(self, reqs: list[SceneRequest]) -> None:
-        self.queue.extend(reqs)
+    @property
+    def queue(self):
+        return self.scheduler.queue
 
-    def run(self) -> list[SceneRequest]:
-        while self.queue:
-            active = [self.queue.pop(0)
-                      for _ in range(min(self.batch, len(self.queue)))]
-            try:
-                plans = [self.cache.get_or_build(r.scene, self.cfg,
-                                                 **self._plan_kw)
-                         for r in active]
-                t0 = jax.tree_util.tree_structure(plans[0])
-                for r, p in zip(active, plans):
-                    if jax.tree_util.tree_structure(p) != t0:
-                        raise RuntimeError(
-                            f"scene {r.rid}: plan signature diverged from "
-                            "the wave (tile-budget overflow?); raise "
-                            "tile_margin in build_plan_spec")
-            except Exception:
-                self.queue = active + self.queue  # don't drop the wave
-                raise
-            feats = [r.scene.feats for r in active]
-            while len(plans) < self.batch:  # pad the wave to fixed batch
-                plans.append(plans[0])
-                feats.append(jnp.zeros_like(feats[0]))
-            batch_plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
-            logits = self._apply(self.params, jnp.stack(feats), batch_plan)
-            logits = np.asarray(logits)
-            for i, r in enumerate(active):
-                r.logits = logits[i]
-                r.pred = logits[i].argmax(-1)
-                r.done = True
-                self.completed.append(r)
-        return self.completed
+    @property
+    def completed(self) -> list[SceneRequest]:
+        return self.scheduler.completed
+
+    @property
+    def wave_stats(self) -> list[WaveStats]:
+        return self.scheduler.stats
+
+    def timings(self) -> dict:
+        return self.scheduler.timings()
+
+    # -- pipeline stages -----------------------------------------------------
+
+    def _plan_stage(self, req: SceneRequest) -> tuple[str, ScenePlan]:
+        """Host-side plan build (numpy leaves); runs on planner threads.
+
+        The payload carries the cache key so the dispatch thread never
+        re-hashes the scene on the critical path."""
+        key = self.cache.key_for(req.scene, self.cfg, **self._plan_kw)
+        plan = self.cache.get_or_build(req.scene, self.cfg, device=False,
+                                       key=key, **self._plan_kw)
+        return key, plan
+
+    def _dispatch_stage(self, reqs: list[SceneRequest], payloads):
+        # the plan stage built (and counted) these host plans; adopt fetches
+        # the memoized device upload without rebuilding (even if LRU
+        # pressure evicted the entry) and without skewing hits/misses
+        plans = [self.cache.adopt(key, hp, device=True)
+                 for key, hp in payloads]
+        t0 = jax.tree_util.tree_structure(plans[0])
+        for r, p in zip(reqs, plans):
+            if jax.tree_util.tree_structure(p) != t0:
+                raise RuntimeError(
+                    f"scene {r.rid}: plan signature diverged from "
+                    "the wave (tile-budget overflow?); raise "
+                    "tile_margin in build_plan_spec")
+        feats = [r.scene.feats for r in reqs]
+        while len(plans) < self.batch:  # pad the wave to fixed batch
+            plans.append(plans[0])
+            feats.append(jnp.zeros_like(feats[0]))
+        return self._apply(self.params, feats, plans)
+
+    def _drain_stage(self, reqs: list[SceneRequest], logits) -> None:
+        logits = np.asarray(logits)
+        for i, r in enumerate(reqs):
+            r.logits = logits[i]
+            r.pred = logits[i].argmax(-1)
+            r.done = True
+
+    # -- driver API ----------------------------------------------------------
+
+    def submit(self, reqs: list[SceneRequest]) -> None:
+        self.scheduler.submit(reqs)
+
+    def run(self, sync: bool | None = None) -> list[SceneRequest]:
+        """Serve the queue to empty (``sync=None`` keeps the constructor
+        mode); a stage failure re-queues the affected waves and re-raises."""
+        return self.scheduler.run(sync=sync)
+
+    def close(self) -> None:
+        """Release the planner thread pool (engine stays usable)."""
+        self.scheduler.close()

@@ -1,0 +1,288 @@
+"""Shared wave scheduler: the queueing/batching core of both engines.
+
+AccSS3D's headline move is overlapping the offline pass (AdMAC metadata +
+SOAR reordering + SPADE selection) with accelerator execution. Serving-side
+that means a three-stage pipeline over request *waves* of up to ``batch``:
+
+* **plan** — per-request host work (plan-cache builds, prompt packing) runs
+  on a small thread pool, up to ``depth`` waves ahead of the device;
+* **dispatch** — one non-blocking jitted call per wave (jax async dispatch:
+  the host gets device handles back before the compute finishes);
+* **drain** — result readback, which only blocks for wave *k−depth* while
+  wave *k* is planning and wave *k−1* is executing.
+
+``WaveScheduler`` owns the request deque, admission, completion plumbing
+and per-wave timing; the engines plug in the three stage callbacks:
+
+    plan(request) -> payload            # host-only, thread-safe
+    dispatch(requests, payloads) -> h   # enqueue device work, no blocking
+    drain(requests, h) -> None          # block on h, fill request results
+
+``sync=True`` degenerates to the classic blocking wave loop (same stages,
+run back-to-back on the caller's thread) — numerics are identical in both
+modes because the stages are. Any stage exception re-queues every admitted
+but uncompleted request at the front of the queue (in-flight device waves
+are drained first), so a poisoned wave neither deadlocks the pipeline nor
+drops requests.
+
+Per-wave ``WaveStats`` make the overlap measurable: ``plan_ms`` is the host
+plan work (summed over requests), ``plan_span_ms`` its wall-clock span,
+``plan_wait_ms`` the span remainder the dispatcher actually had to wait
+for, and ``overlap_frac = 1 - wait/span`` the fraction hidden behind
+device execution (0 in sync mode by construction).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from collections.abc import Callable, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+
+
+def overlap_fraction(plan_span_ms: float, plan_wait_ms: float) -> float:
+    """Fraction of the plan stage's wall-clock span hidden behind device
+    execution. The span (first build start -> last build end), not the sum
+    of per-thread build times, is the denominator, so planner-thread
+    parallelism within a wave doesn't masquerade as pipeline overlap."""
+    if plan_span_ms <= 0.0:
+        return 0.0
+    return max(0.0, min(1.0, 1.0 - plan_wait_ms / plan_span_ms))
+
+
+@dataclass
+class WaveStats:
+    """Timing of one wave through the plan/dispatch/drain stages (ms)."""
+
+    wave: int
+    rids: tuple
+    sync: bool
+    plan_ms: float = 0.0       # host plan-stage work, summed over requests
+    plan_span_ms: float = 0.0  # wall-clock span of this wave's plan builds
+    plan_wait_ms: float = 0.0  # span remainder the dispatcher waited on
+    dispatch_ms: float = 0.0   # host time enqueueing the jitted call
+    device_ms: float = 0.0     # dispatch call -> results drained
+    drain_ms: float = 0.0      # time blocked in readback
+
+    @property
+    def overlap_frac(self) -> float:
+        """Fraction of plan wall-clock hidden behind device execution."""
+        return overlap_fraction(self.plan_span_ms, self.plan_wait_ms)
+
+
+def _now_ms() -> float:
+    return time.perf_counter() * 1e3
+
+
+class WaveScheduler:
+    """Wave admission + async pipeline shared by the LM and 3D engines."""
+
+    def __init__(
+        self,
+        *,
+        batch: int,
+        plan: Callable,
+        dispatch: Callable,
+        drain: Callable,
+        sync: bool = True,
+        depth: int = 2,
+        planner_threads: int = 2,
+    ):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if planner_threads < 1:
+            raise ValueError(
+                f"planner_threads must be >= 1, got {planner_threads}")
+        self.batch = batch
+        self.sync = sync
+        self.depth = depth
+        self.planner_threads = planner_threads
+        self._plan, self._dispatch, self._drain = plan, dispatch, drain
+        self.queue: deque = deque()
+        self.completed: list = []
+        self.stats: list[WaveStats] = []
+        #: mode of the run in progress (stages may consult it to trade
+        #: host syncs for pipelining); None outside ``run``
+        self.running_sync: bool | None = None
+        self._wave = 0
+        self._pool: ThreadPoolExecutor | None = None  # lazy, persists runs
+
+    # -- queue plumbing ------------------------------------------------------
+
+    def submit(self, reqs: Sequence) -> None:
+        self.queue.extend(reqs)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def _admit(self) -> list:
+        return [self.queue.popleft()
+                for _ in range(min(self.batch, len(self.queue)))]
+
+    def _requeue(self, waves: list[list]) -> None:
+        """Put admitted-but-uncompleted waves back at the queue front."""
+        pending = [r for wave in waves for r in wave]
+        self.queue.extendleft(reversed(pending))
+
+    def _new_stats(self, reqs: list, sync: bool) -> WaveStats:
+        st = WaveStats(self._wave, tuple(getattr(r, "rid", None)
+                                         for r in reqs), sync)
+        self._wave += 1
+        return st
+
+    def _finish(self, reqs: list, st: WaveStats) -> None:
+        self.stats.append(st)
+        self.completed.extend(reqs)
+
+    def timings(self) -> dict:
+        """Aggregate pipeline timings over every wave served so far."""
+        span = sum(s.plan_span_ms for s in self.stats)
+        wait = sum(s.plan_wait_ms for s in self.stats)
+        return {
+            "waves": len(self.stats),
+            "plan_ms": sum(s.plan_ms for s in self.stats),
+            "plan_span_ms": span,
+            "plan_wait_ms": wait,
+            "device_ms": sum(s.device_ms for s in self.stats),
+            "drain_ms": sum(s.drain_ms for s in self.stats),
+            "overlap_frac": overlap_fraction(span, wait),
+        }
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, sync: bool | None = None) -> list:
+        """Serve the queue to empty; returns the completed-request list."""
+        self.running_sync = self.sync if sync is None else sync
+        try:
+            if self.running_sync:
+                self._run_sync()
+            else:
+                self._run_async()
+        finally:
+            self.running_sync = None
+        return self.completed
+
+    def _timed_plan(self, req):
+        t0 = _now_ms()
+        payload = self._plan(req)
+        return payload, t0, _now_ms()
+
+    def _run_sync(self) -> None:
+        while self.queue:
+            reqs = self._admit()
+            st = self._new_stats(reqs, sync=True)
+            try:
+                payloads = []
+                for r in reqs:
+                    payload, t0, t1 = self._timed_plan(r)
+                    payloads.append(payload)
+                    st.plan_ms += t1 - t0
+                st.plan_span_ms = st.plan_ms   # serial builds
+                st.plan_wait_ms = st.plan_span_ms  # nothing hidden in sync
+                t_disp = _now_ms()
+                handle = self._dispatch(reqs, payloads)
+                st.dispatch_ms = _now_ms() - t_disp
+                t_drain = _now_ms()
+                self._drain(reqs, handle)
+                st.drain_ms = _now_ms() - t_drain
+                st.device_ms = _now_ms() - t_disp
+            except BaseException:
+                self._requeue([reqs])
+                raise
+            self._finish(reqs, st)
+
+    def _pool_or_start(self) -> ThreadPoolExecutor:
+        # lazy and persistent: paced workloads call run() per arrival group
+        # and should not pay thread churn every time
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.planner_threads,
+                thread_name_prefix="wave-planner")
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down the planner thread pool (idempotent; a later run()
+        lazily recreates it)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True, cancel_futures=True)
+            self._pool = None
+
+    def _run_async(self) -> None:
+        pool = self._pool_or_start()
+        planned: deque = deque()   # (reqs, stats, [plan futures])
+        inflight: deque = deque()  # (reqs, stats, handle, t_dispatched)
+        failed: list = []          # requests of the wave that blew up
+        futs: list = []            # plan futures of the wave being gathered
+        try:
+            while self.queue or planned or inflight:
+                # keep up to `depth` waves in the plan stage
+                while self.queue and len(planned) < self.depth:
+                    reqs = self._admit()
+                    failed = reqs  # cover the gap until safely planned
+                    st = self._new_stats(reqs, sync=False)
+                    wave_futs = [pool.submit(self._timed_plan, r)
+                                 for r in reqs]
+                    planned.append((reqs, st, wave_futs))
+                    failed = []
+                # dispatch the oldest planned wave (waits only for the
+                # *remaining* plan time — the hidden part ran while the
+                # previous wave was executing on the device)
+                if planned:
+                    reqs, st, futs = planned.popleft()
+                    failed = reqs
+                    t_gather = _now_ms()
+                    payloads, starts, ends = [], [], []
+                    for f in futs:
+                        payload, t0, t1 = f.result()
+                        payloads.append(payload)
+                        st.plan_ms += t1 - t0
+                        starts.append(t0)
+                        ends.append(t1)
+                    if ends:
+                        st.plan_span_ms = max(ends) - min(starts)
+                    st.plan_wait_ms = _now_ms() - t_gather
+                    t_disp = _now_ms()
+                    handle = self._dispatch(reqs, payloads)
+                    st.dispatch_ms = _now_ms() - t_disp
+                    inflight.append((reqs, st, handle, t_disp))
+                    failed = []
+                    futs = []
+                # drain once the device pipeline is `depth` deep, or
+                # unconditionally when there is nothing left to feed it
+                while inflight and (len(inflight) >= self.depth
+                                    or not (self.queue or planned)):
+                    item = inflight.popleft()
+                    failed = item[0]
+                    self._drain_one(item)
+                    failed = []
+        except BaseException:
+            # salvage device work already in flight, then put every
+            # unfinished request back so nothing is dropped; cancel queued
+            # plan builds (of the failed wave and the lookahead waves) so
+            # the exception isn't stalled behind them
+            for f in futs:
+                f.cancel()
+            leftovers = []
+            for item in inflight:
+                try:
+                    self._drain_one(item)
+                except BaseException:
+                    leftovers.append(item[0])
+            leftovers.append(failed)
+            for reqs, _, wave_futs in planned:
+                for f in wave_futs:
+                    f.cancel()
+                leftovers.append(reqs)
+            self._requeue(leftovers)
+            raise
+
+    def _drain_one(self, item) -> None:
+        reqs, st, handle, t_disp = item
+        t0 = _now_ms()
+        self._drain(reqs, handle)
+        t1 = _now_ms()
+        st.drain_ms = t1 - t0
+        st.device_ms = t1 - t_disp
+        self._finish(reqs, st)

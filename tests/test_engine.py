@@ -148,3 +148,38 @@ def test_scene_engine_serves_batches_with_one_compilation():
     eng.submit([SceneRequest(99, scenes[0])])
     eng.run()
     assert eng.cache.hits >= 1 and eng.n_compilations == 1
+
+
+def test_host_meta_numpy_mirrors_match_jax_builders(setup):
+    """The host plan pass must be bit-identical to the jitted AdMAC ops."""
+    from repro.core import host_meta
+    from repro.core.coir import build_cirf
+    from repro.core.hashgrid import downsample_coords, kernel_offsets
+    from repro.core.sparse_conv import transposed_coir
+
+    cfg, params, t, plan = setup
+    coords, mask = np.asarray(t.coords), np.asarray(t.mask)
+    offs3 = kernel_offsets(3)
+    got = host_meta.build_cirf_np(coords, mask, coords, mask, offs3, RES)
+    want = build_cirf(t.coords, t.mask, t.coords, t.mask,
+                      jnp.asarray(offs3), RES)
+    np.testing.assert_array_equal(got.indices, np.asarray(want.indices))
+    np.testing.assert_array_equal(got.bitmask, np.asarray(want.bitmask))
+
+    dn_c, dn_m = host_meta.downsample_coords_np(coords, mask, RES, 2)
+    jn_c, jn_m = downsample_coords(t.coords, t.mask, RES, 2)
+    np.testing.assert_array_equal(dn_c, np.asarray(jn_c))
+    np.testing.assert_array_equal(dn_m, np.asarray(jn_m))
+
+    offs2 = kernel_offsets(2, centered=False)
+    got2 = host_meta.build_cirf_np(dn_c, dn_m, coords, mask, offs2, RES,
+                                   stride=2)
+    want2 = build_cirf(jn_c, jn_m, t.coords, t.mask, jnp.asarray(offs2),
+                       RES, stride=2)
+    np.testing.assert_array_equal(got2.indices, np.asarray(want2.indices))
+
+    got3 = host_meta.transposed_coir_np(dn_c, dn_m, coords, mask, RES, 2, 2)
+    coarse = SparseVoxelTensor(jn_c, jnp.zeros((jn_c.shape[0], 1)), jn_m)
+    want3 = transposed_coir(coarse, t.coords, t.mask, RES, 2, 2)
+    np.testing.assert_array_equal(got3.indices, np.asarray(want3.indices))
+    np.testing.assert_array_equal(got3.bitmask, np.asarray(want3.bitmask))

@@ -108,3 +108,46 @@ def test_moe_grouped_gemm_sweep(rng, e, c, d, f, bf, dt):
     rtol, atol = _tol(dt)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32), rtol=rtol, atol=atol)
+
+
+def test_resolve_interpret_gates_on_backend(monkeypatch):
+    from repro.kernels import runtime
+
+    # explicit override always wins
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False
+    # env override beats backend detection
+    monkeypatch.setenv(runtime.ENV_INTERPRET, "0")
+    assert runtime.resolve_interpret(None) is False
+    monkeypatch.setenv(runtime.ENV_INTERPRET, "1")
+    assert runtime.resolve_interpret(None) is True
+    assert runtime.resolve_interpret(False) is False  # arg still wins
+    # default: compiled on TPU, interpreted everywhere else
+    monkeypatch.delenv(runtime.ENV_INTERPRET)
+    expected = jax.default_backend() != "tpu"
+    assert runtime.resolve_interpret(None) is expected
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert runtime.resolve_interpret(None) is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert runtime.resolve_interpret(None) is True
+
+
+def test_interpret_resolves_per_call_not_at_first_trace(monkeypatch):
+    """The env override must apply to later calls too: resolution happens in
+    the unjitted wrapper, keying the jit cache on the concrete mode."""
+    from repro.kernels import runtime
+    from repro.kernels.sspnna import sspnna as mod
+
+    seen = {}
+
+    def fake(feats, idx, w, *, block_n, interpret):
+        seen["interpret"] = interpret
+
+    monkeypatch.setattr(mod, "_sspnna_tiles", fake)
+    mod.sspnna_tiles(None, None, None)
+    assert seen["interpret"] is (jax.default_backend() != "tpu")
+    monkeypatch.setenv(runtime.ENV_INTERPRET, "0")
+    mod.sspnna_tiles(None, None, None)
+    assert seen["interpret"] is False
+    mod.sspnna_tiles(None, None, None, interpret=True)  # explicit still wins
+    assert seen["interpret"] is True
