@@ -23,16 +23,13 @@ Standalone CLI (what the CI smoke job runs):
 """
 from __future__ import annotations
 
-import argparse
-import json
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, standalone_bench_main
 from repro import engine
 from repro.data.scenes import N_CLASSES, make_scene
 from repro.models.scn import UNetConfig, init_unet
@@ -154,31 +151,9 @@ def run(quick: bool = False):
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="small scenes/counts (the CI smoke job)")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write rows as a JSON artifact (CI perf log)")
-    args = ap.parse_args(argv)
-    print("name,us_per_call,derived")
-    t0 = time.time()
-    run(quick=args.quick)
-    total_s = time.time() - t0
-    print(f"# total {total_s:.1f}s", file=sys.stderr)
-    if args.json:
-        from benchmarks.common import ROWS
-        payload = {
-            "schema": "bench-rows/v1",
-            "unix_time": int(t0),
-            "total_seconds": round(total_s, 2),
-            "modules": ["bench_serving"],
-            "rows": [{"name": n, "us_per_call": u, "derived": d}
-                     for n, u, d in ROWS],
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
-        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
-              file=sys.stderr)
+    standalone_bench_main(run, "bench_serving",
+                          "small scenes/counts (the CI smoke job)",
+                          description=__doc__, argv=argv)
 
 
 if __name__ == "__main__":

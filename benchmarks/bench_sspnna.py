@@ -1,0 +1,136 @@
+"""Fused vs pre-gathered vs XLA gather-einsum SSpNNA paths (§V-A).
+
+Three executions of the same tiled sparse conv, at serving-engine shapes
+(budgeted tile stacks padded the way ``build_plan_spec``'s ``tile_margin``
+pads them, so the fused kernel's dead-tile skip sees realistic waste):
+
+* **fused** — ``run_sspnna_conv`` with ``pair_counts``: global features
+  straight into the Pallas kernel, scalar-prefetched DMA tables gather each
+  tile's working set on-chip, outputs DMA'd to their global rows. No
+  ``(T, dI, C)`` HBM intermediate, dead tiles skipped.
+* **pregathered** — the tile-stack kernel behind an XLA dynamic-gather that
+  materializes the full working-set copy in HBM, plus the ``.at[].add``
+  scatter back (the pre-PR path).
+* **xla** — gather + the jnp oracle einsum + scatter (no Pallas at all):
+  what plain XLA makes of the same metadata.
+
+Each row reports measured wall time next to the *modeled* HBM feature
+traffic from ``core.tiles.modeled_hbm_bytes`` (driven by the
+``plan_dma_tables`` entry counts), so the measured speedup can be read
+against the paper's bandwidth argument. All three paths are asserted
+allclose before timing.
+
+Standalone CLI (what the CI smoke job runs):
+
+    python -m benchmarks.bench_sspnna --quick --json BENCH_sspnna.json
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    build_scene,
+    emit,
+    scene_metadata,
+    standalone_bench_main,
+    time_fn,
+)
+from repro.core.tiles import build_tile_plan, dma_tile_tables, modeled_hbm_bytes
+from repro.kernels.sspnna.ops import run_sspnna_conv
+
+K_SUB = 27
+TILE_MARGIN = 2.0  # mirror build_plan_spec's default serving padding
+
+
+def _sweep_cases(quick: bool):
+    # (name, resolution, capacity, C, N, delta_o, delta_i)
+    if quick:
+        return [("r24_c16", 24, 2048, 16, 16, 32, 128)]
+    return [
+        ("r24_c16", 24, 2048, 16, 16, 32, 128),
+        ("r32_c16", 32, 4096, 16, 16, 64, 192),
+        ("r48_c32", 48, 16384, 32, 32, 64, 192),
+    ]
+
+
+def _bench_case(name, res, cap, c, n, d_o, d_i, iters):
+    t, _ = build_scene(seed=0, resolution=res, capacity=cap)
+    coir, _, order = scene_metadata(t, res)
+    n_active = int(np.asarray(t.mask).sum())
+    density = n_active / res**3
+
+    # budgeted plan padded like a pinned serving spec (dead tiles included)
+    realized = build_tile_plan(np.asarray(coir.indices), order.order, d_o, d_i)
+    n_tiles = int(math.ceil(TILE_MARGIN * realized.n_tiles)) + 2
+    tp = build_tile_plan(np.asarray(coir.indices), order.order, d_o, d_i,
+                         n_tiles=n_tiles)
+    dma = dma_tile_tables(tp, cap)
+    alive = int((tp.pair_counts > 0).sum())
+
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.normal(size=(cap, c)), jnp.float32)
+    weights = jnp.asarray(rng.normal(size=(K_SUB, c, n)) * 0.1, jnp.float32)
+    out_rows = jnp.asarray(dma.out_rows)
+    in_rows = jnp.asarray(dma.in_rows)
+    local_idx = jnp.asarray(tp.local_idx)
+    counts = jnp.asarray(dma.pair_counts)
+
+    def fused():
+        return run_sspnna_conv(feats, weights, out_rows, in_rows, local_idx,
+                               n_out=cap, pair_counts=counts, use_kernel=True)
+
+    def pregathered():
+        return run_sspnna_conv(feats, weights, out_rows, in_rows, local_idx,
+                               n_out=cap, use_kernel=True, fused=False)
+
+    def xla():
+        return run_sspnna_conv(feats, weights, out_rows, in_rows, local_idx,
+                               n_out=cap, use_kernel=False, fused=False)
+
+    base = np.asarray(xla())
+    for arm, f in (("fused", fused), ("pregathered", pregathered)):
+        np.testing.assert_allclose(np.asarray(f()), base, rtol=1e-4,
+                                   atol=1e-4, err_msg=f"{name}/{arm}")
+
+    model = modeled_hbm_bytes(tp, c, n)
+    # best-of-reps per arm: the CI host is shared, min filters load spikes
+    times = {arm: time_fn(f, iters=iters, reps=3)
+             for arm, f in (("fused", fused), ("pregathered", pregathered),
+                            ("xla", xla))}
+    geom = (f"density={density:.4f} T={tp.n_tiles} alive={alive} "
+            f"dO={d_o} dI={d_i} C={c} N={n}")
+    for arm in ("fused", "pregathered", "xla"):
+        key = arm if arm != "xla" else "reference_gather"
+        emit(f"sspnna/{name}_{arm}", times[arm],
+             f"{geom} modeled_hbm_mb={model[key] / 1e6:.2f}")
+    speedup = times["pregathered"] / max(times["fused"], 1e-9)
+    emit(f"sspnna/{name}_fused_speedup", 0.0,
+         f"fused_vs_pregathered={speedup:.2f}x "
+         f"fused_vs_xla={times['xla'] / max(times['fused'], 1e-9):.2f}x "
+         f"modeled_traffic_ratio="
+         f"{model['pregathered'] / max(model['fused'], 1):.2f}x")
+    return speedup
+
+
+def run(quick: bool = False):
+    iters = 3 if quick else 5
+    speedups = [
+        _bench_case(name, res, cap, c, n, d_o, d_i, iters)
+        for name, res, cap, c, n, d_o, d_i in _sweep_cases(quick)
+    ]
+    emit("sspnna/fused_speedup_min", 0.0,
+         f"min_fused_vs_pregathered={min(speedups):.2f}x "
+         f"across {len(speedups)} scene shapes")
+
+
+def main(argv=None) -> None:
+    standalone_bench_main(run, "bench_sspnna",
+                          "single small scene (the CI smoke job)",
+                          description=__doc__, argv=argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,5 @@
-"""Shared benchmark scaffolding: scene building + timing + CSV rows."""
+"""Shared benchmark scaffolding: scene building + timing + CSV rows +
+the fused-kernel ``block_n`` sweep (pinned into plan specs)."""
 from __future__ import annotations
 
 import time
@@ -21,15 +22,20 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def time_fn(fn, *args, iters=3, warmup=1):
+def time_fn(fn, *args, iters=3, warmup=1, reps=1):
+    """Mean us/call over ``iters``; with ``reps > 1``, best-of-``reps`` means
+    (min is robust to background load on shared CI hosts)."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)  # us
+    return best
 
 
 def build_scene(seed=0, resolution=48, capacity=16384):
@@ -45,3 +51,97 @@ def scene_metadata(t: SparseVoxelTensor, resolution: int):
         t.coords, t.mask, jnp.asarray(kernel_offsets(3)), resolution))
     order = soar.soar_order(nbr, np.asarray(t.mask), 512)
     return coir, nbr, order
+
+
+# -- standalone bench CLIs ---------------------------------------------------
+
+def standalone_bench_main(run, module_name: str, quick_help: str,
+                          description: str | None = None, argv=None) -> None:
+    """Shared ``main()`` for benches with their own CI smoke CLI
+    (``--quick`` / ``--json``): one place owns the CSV header, timing and
+    the ``bench-rows/v1`` JSON artifact schema."""
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--quick", action="store_true", help=quick_help)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact (CI perf log)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    run(quick=args.quick)
+    total_s = time.time() - t0
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
+    if args.json:
+        payload = {
+            "schema": "bench-rows/v1",
+            "unix_time": int(t0),
+            "total_seconds": round(total_s, 2),
+            "modules": [module_name],
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
+              file=sys.stderr)
+
+
+# -- fused-kernel block_n autotune -------------------------------------------
+
+# per-parameter-set memo so a plan-spec build sweeps each layer shape once
+_BLOCK_N_CACHE: dict[tuple, int] = {}
+
+
+def _block_n_candidates(n: int) -> list[int]:
+    """Divisors of ``n`` worth sweeping: full-N down to 8-wide blocks."""
+    cands = [b for b in (n, n // 2, n // 4) if b >= 8 and n % b == 0]
+    return cands or [n]
+
+
+def autotune_block_n(c_in: int, n_out: int, delta_o: int, delta_i: int,
+                     *, kernel_volume: int = 27, n_tiles: int = 8,
+                     iters: int = 3, seed: int = 0) -> int:
+    """Pick the fused kernel's N-block for one ``(C, N, dO, dI)`` signature.
+
+    Times ``kernels.sspnna.sspnna_fused`` on synthetic tiles at the layer's
+    shape for each candidate divisor of ``n_out`` and returns the fastest.
+    Memoized per full parameter set; pass as
+    ``build_plan_spec(tune_block_n=...)`` so SPADE plans pin the choice in
+    ``Dispatch.block_n`` instead of defaulting to full-N.
+    """
+    key = (c_in, n_out, delta_o, delta_i, kernel_volume, n_tiles, iters, seed)
+    if key in _BLOCK_N_CACHE:
+        return _BLOCK_N_CACHE[key]
+    from repro.kernels.sspnna.sspnna import sspnna_fused
+
+    rng = np.random.default_rng(seed)
+    # big enough for the working sets AND the n_tiles*delta_o disjoint
+    # output rows drawn below
+    v = max(4 * delta_i, n_tiles * delta_o, 256)
+    feats = jnp.asarray(rng.normal(size=(v, c_in)), jnp.float32)
+    weights = jnp.asarray(
+        rng.normal(size=(kernel_volume, c_in, n_out)) * 0.1, jnp.float32)
+    in_rows = jnp.asarray(
+        rng.integers(0, v, (n_tiles, delta_i)).astype(np.int32))
+    out_rows = jnp.asarray(
+        rng.permutation(v)[: n_tiles * delta_o]
+        .reshape(n_tiles, delta_o).astype(np.int32))
+    local_idx = jnp.asarray(
+        rng.integers(-1, delta_i, (n_tiles, delta_o, kernel_volume))
+        .astype(np.int32))
+    counts = jnp.ones((n_tiles,), jnp.int32)
+
+    best_bn, best_us = 0, float("inf")
+    for bn in _block_n_candidates(n_out):
+        us = time_fn(
+            lambda bn=bn: sspnna_fused(
+                feats, weights, out_rows, in_rows, local_idx, counts,
+                n_out=v, block_n=bn),
+            iters=iters, warmup=1)
+        if us < best_us:
+            best_bn, best_us = bn, us
+    _BLOCK_N_CACHE[key] = best_bn
+    return best_bn

@@ -17,8 +17,9 @@ import sys
 import time
 
 # modules cheap enough for the CI smoke job (reduced configs, small scenes).
-# bench_serving is smoked separately (its own --quick CLI writes
-# BENCH_serving.json) so it isn't duplicated here.
+# bench_serving and bench_sspnna are smoked separately (their own --quick
+# CLIs write BENCH_serving.json / BENCH_sspnna.json) so they aren't
+# duplicated here.
 QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
          "bench_dataflow")
 
@@ -43,10 +44,12 @@ def main(argv=None) -> None:
         bench_serving,
         bench_soar,
         bench_spade_attrs,
+        bench_sspnna,
     )
 
     modules = [bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
-               bench_dataflow, bench_scn, bench_serving, bench_moe, bench_lm]
+               bench_dataflow, bench_sspnna, bench_scn, bench_serving,
+               bench_moe, bench_lm]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in modules}

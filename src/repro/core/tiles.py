@@ -5,15 +5,23 @@ sized by the SPADE plan: each tile owns a run of dO consecutive SOAR-ordered
 outputs, the tile's unique input rows (its L1 working set), and *tile-local*
 partner indices. Tiles whose unique-input count overshoots the RST
 allocation are split in two (next power of two), exactly the paper's
-overshoot rule.
+overshoot rule. A *single row* whose working set overshoots ``delta_i`` is
+split across plane groups (unbudgeted mode) or is a hard planning error
+(budgeted mode) — pairs are never silently dropped; ``TilePlan`` carries
+the accounting (``n_row_splits`` / ``dropped_pairs``) so callers can assert
+the no-drop invariant.
 
-Host-side numpy; the result is a stack of fixed-shape arrays consumed by the
-Pallas kernel (``repro.kernels.sspnna``) and by the DMA-table generator.
+Host-side numpy; the result is a stack of fixed-shape arrays consumed by
+the Pallas kernel (``repro.kernels.sspnna``) and, via ``dma_tile_tables``,
+by the fused kernel's scalar-prefetched DMA engines (§V-A-3): the ordered
+datatype gets one block entry per tile, the unordered datatype one
+per-voxel entry — exactly the two tables the fused kernel walks.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
@@ -23,7 +31,9 @@ class TilePlan:
     out_rows: np.ndarray    # (T, dO) int32 global output row per tile slot, -1 pad
     in_rows: np.ndarray     # (T, dI) int32 global input rows (tile working set), -1 pad
     local_idx: np.ndarray   # (T, dO, K) int32 index into the tile's in_rows, -1 hole
-    pair_counts: np.ndarray  # (T,) valid pairs per tile (ops-per-tile / dC / dN)
+    pair_counts: np.ndarray  # (T,) int32 valid pairs per tile (ops-per-tile / dC / dN)
+    n_row_splits: int = 0   # tiles created by splitting one row across planes
+    dropped_pairs: int = 0  # invariant: always 0 (kept so callers can assert it)
 
     @property
     def n_tiles(self) -> int:
@@ -38,6 +48,33 @@ class TilePlan:
         return self.in_rows.shape[1]
 
 
+class DmaTileTables(NamedTuple):
+    """``TilePlan`` re-emitted in the layout the fused kernel's DMA engines
+    walk (scalar-prefetch arguments, §V-A-3):
+
+    * ``in_rows``: (T, dI) int32, pad slots clamped to row 0 — every entry is
+      a safe HBM source; validity lives in ``local_idx`` (no hole ever
+      references a pad slot, so the clamped rows are gathered-and-ignored).
+    * ``out_rows``: (T, dO) int32, pad slots redirected to the trash row
+      ``n_out`` — the kernel scatters every slot unconditionally into an
+      ``(n_out + 1)``-row buffer and the caller slices the trash row off.
+    * ``pair_counts``: (T,) int32, the dead-tile predicate (0 ⇒ the kernel
+      skips the tile's DMAs and MACs entirely).
+    """
+
+    in_rows: np.ndarray
+    out_rows: np.ndarray
+    pair_counts: np.ndarray
+
+
+def dma_tile_tables(plan: TilePlan, n_out: int) -> DmaTileTables:
+    """Emit ``plan``'s tables in DMA-table layout for an ``n_out``-row scene."""
+    in_rows = np.maximum(plan.in_rows, 0).astype(np.int32)
+    out_rows = np.where(plan.out_rows < 0, n_out, plan.out_rows).astype(np.int32)
+    return DmaTileTables(in_rows, out_rows,
+                         plan.pair_counts.astype(np.int32))
+
+
 def max_tiles(n_rows: int, delta_o: int, delta_i: int, kernel_volume: int) -> int:
     """Upper bound on the tile count of the budgeted (``n_tiles``) planner.
 
@@ -50,6 +87,27 @@ def max_tiles(n_rows: int, delta_o: int, delta_i: int, kernel_volume: int) -> in
     by_rows = math.ceil(n / delta_o)
     by_inputs = math.ceil(n * kernel_volume / max(delta_i - kernel_volume + 1, 1))
     return by_rows + by_inputs + 1
+
+
+def _split_row_by_planes(part: np.ndarray, delta_i: int) -> list[np.ndarray]:
+    """Partition one row's K planes into groups whose unique partner sets fit
+    ``delta_i``. Each plane contributes at most one partner, so the greedy
+    walk needs at most ceil(n_unique / delta_i) groups and drops nothing."""
+    k = part.shape[0]
+    groups: list[list[int]] = []
+    cur: list[int] = []
+    cur_uniq: set[int] = set()
+    for p in range(k):
+        partner = int(part[p])
+        new = {partner} if partner >= 0 else set()
+        if cur and len(cur_uniq | new) > delta_i:
+            groups.append(cur)
+            cur, cur_uniq = [], set()
+        cur.append(p)
+        cur_uniq |= new
+    if cur:
+        groups.append(cur)
+    return [np.asarray(g, np.int64) for g in groups]
 
 
 def build_tile_plan(
@@ -67,12 +125,22 @@ def build_tile_plan(
         ``delta_i`` by construction (close a tile before a row would
         overflow it) — and pad the tile stack to exactly ``n_tiles`` so the
         output shapes are scene-independent (serving-engine mode). Raises
-        ``ValueError`` if the scene needs more tiles than that.
+        ``ValueError`` if the scene needs more tiles than that, or if a
+        single row's working set cannot fit ``delta_i`` (pairs are never
+        silently dropped).
+
+    In unbudgeted mode a single row whose unique partners overshoot
+    ``delta_i`` (only possible when ``delta_i < K``) is split across plane
+    groups into several tiles that share the output row; such plans require
+    an accumulating scatter (``TilePlan.n_row_splits > 0`` flags them, and
+    the fused kernel's overwrite-DMA path refuses them).
     """
     cirf_indices = np.asarray(cirf_indices)
     k = cirf_indices.shape[1]
 
-    tiles: list[np.ndarray] = []
+    # each planned tile: (rows, planes) — planes is None for "all K planes"
+    tiles: list[tuple[np.ndarray, np.ndarray | None]] = []
+    n_row_splits = 0
 
     if n_tiles is not None:
         if delta_i < k:
@@ -82,13 +150,17 @@ def build_tile_plan(
         for r in np.asarray(order, np.int64):
             part = cirf_indices[r]
             new = set(part[part >= 0].tolist())
+            if len(new) > delta_i:  # can't happen while delta_i >= K; be loud
+                raise ValueError(
+                    f"row {int(r)} working set {len(new)} > delta_i {delta_i} "
+                    "in budgeted mode (would drop pairs)")
             if cur and (len(cur) == delta_o or len(cur_uniq | new) > delta_i):
-                tiles.append(np.asarray(cur, np.int64))
+                tiles.append((np.asarray(cur, np.int64), None))
                 cur, cur_uniq = [], set()
             cur.append(int(r))
             cur_uniq |= new
         if cur:
-            tiles.append(np.asarray(cur, np.int64))
+            tiles.append((np.asarray(cur, np.int64), None))
         if len(tiles) > n_tiles:
             raise ValueError(
                 f"scene needs {len(tiles)} tiles > budget {n_tiles} "
@@ -98,12 +170,19 @@ def build_tile_plan(
             """Split until the unique-input working set fits delta_i."""
             part = cirf_indices[rows]
             uniq = np.unique(part[part >= 0])
-            if len(uniq) > delta_i and len(rows) > 1:
-                mid = len(rows) // 2
-                emit(rows[:mid])
-                emit(rows[mid:])
+            if len(uniq) > delta_i:
+                if len(rows) > 1:
+                    mid = len(rows) // 2
+                    emit(rows[:mid])
+                    emit(rows[mid:])
+                else:  # single-row overshoot: split across plane groups
+                    nonlocal n_row_splits
+                    groups = _split_row_by_planes(part[0], delta_i)
+                    n_row_splits += len(groups) - 1
+                    for g in groups:
+                        tiles.append((rows, g))
             else:
-                tiles.append(rows)
+                tiles.append((rows, None))
 
         for s in range(0, len(order), delta_o):
             emit(np.asarray(order[s:s + delta_o], np.int64))
@@ -112,21 +191,25 @@ def build_tile_plan(
     out_rows = np.full((t, delta_o), -1, np.int32)
     in_rows = np.full((t, delta_i), -1, np.int32)
     local_idx = np.full((t, delta_o, k), -1, np.int32)
-    pair_counts = np.zeros((t,), np.int64)
-    for ti, rows in enumerate(tiles):
+    pair_counts = np.zeros((t,), np.int32)
+    for ti, (rows, planes) in enumerate(tiles):
         out_rows[ti, : len(rows)] = rows
-        part = cirf_indices[rows]  # (r, K)
+        part = cirf_indices[rows].copy()  # (r, K)
+        if planes is not None:  # plane-split tile: hole the other planes
+            keep = np.zeros((k,), bool)
+            keep[planes] = True
+            part[:, ~keep] = -1
         valid = part >= 0
         uniq = np.unique(part[valid])
-        if len(uniq) > delta_i:  # single row overshoot: truncate working set
-            uniq = uniq[:delta_i]
+        assert len(uniq) <= delta_i, "planner invariant: working set fits"
         in_rows[ti, : len(uniq)] = uniq
         loc = np.searchsorted(uniq, part)
         loc = np.clip(loc, 0, max(len(uniq) - 1, 0))
         hit = valid & (uniq[loc] == part) if len(uniq) else np.zeros_like(valid)
         local_idx[ti, : len(rows)] = np.where(hit, loc, -1)
         pair_counts[ti] = int(hit.sum())
-    return TilePlan(out_rows, in_rows, local_idx, pair_counts)
+    return TilePlan(out_rows, in_rows, local_idx, pair_counts,
+                    n_row_splits=n_row_splits, dropped_pairs=0)
 
 
 def plan_dma_tables(plan: TilePlan) -> dict:
@@ -141,4 +224,37 @@ def plan_dma_tables(plan: TilePlan) -> dict:
         "voxel_entries": int(in_valid),  # unordered side: per voxel
         "in_rows_transferred": int(in_valid),
         "out_rows_transferred": int(out_valid),
+    }
+
+
+def modeled_hbm_bytes(plan: TilePlan, c_in: int, n_out: int,
+                      itemsize: int = 4) -> dict:
+    """Modeled HBM feature traffic of the three execution paths for one conv
+    with ``c_in`` input and ``n_out`` output channels (§V-A).
+
+    The fused kernel streams every DMA-table slot of every *alive* tile —
+    pad slots are clamped entries and transfer too, so the model charges
+    the padded ``dI`` / ``dO`` widths, exactly what ``_fused_kernel``'s DMA
+    loops issue; dead tiles are skipped. The pre-gathered paths transfer
+    the valid entries through the gather/scatter *and* round-trip the full
+    ``(T, dI, C)`` working-set copy and ``(T, dO, N)`` tile-output stack
+    through HBM (padded, dead tiles included — XLA can't skip them).
+    Metadata (int32 tables) is counted once for every path.
+    """
+    d = plan_dma_tables(plan)
+    t, d_o, d_i = plan.n_tiles, plan.delta_o, plan.delta_i
+    k = plan.local_idx.shape[2]
+    meta = (t * d_i + t * d_o + t * d_o * k + t) * 4  # int32 tables
+    valid_read = d["in_rows_transferred"] * c_in * itemsize
+    valid_write = d["out_rows_transferred"] * n_out * itemsize
+    alive = int((plan.pair_counts > 0).sum())
+    gathered = t * d_i * c_in * itemsize       # full (T, dI, C) copy
+    tile_out = t * d_o * n_out * itemsize      # full (T, dO, N) stack
+    # gather write + kernel read of the copy, tile-out write + scatter read
+    roundtrip = meta + valid_read + valid_write + 2 * gathered + 2 * tile_out
+    return {
+        "alive_tiles": alive,
+        "fused": meta + alive * (d_i * c_in + d_o * n_out) * itemsize,
+        "pregathered": roundtrip,
+        "reference_gather": roundtrip,
     }

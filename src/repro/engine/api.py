@@ -11,9 +11,14 @@ Backend dispatch rules:
 * ``"reference"`` — gather + one fused einsum over all weight planes
   (``core.sparse_conv.reference_conv_cirf``), the coarse M-V dispatch and
   the numerical oracle.
-* ``"sspnna"`` — the tiled Pallas path (``kernels.sspnna``) driven by the
-  plan's ``TileArrays``. Plans without tile metadata (resolution-changing
-  convs, tile-budget overflows) fall back to reference.
+* ``"sspnna"`` — the fused gather-GEMM-scatter Pallas path
+  (``kernels.sspnna``) driven by the plan's ``TileArrays``: global features
+  go straight into the kernel, whose scalar-prefetched DMA tables stream
+  tile working sets on-chip and write output rows in place — no gathered
+  HBM intermediate, no post-kernel scatter. ``Dispatch.block_n`` (pinned by
+  ``build_plan_spec(tune_block_n=...)``) selects the kernel's N-block.
+  Plans without tile metadata (resolution-changing convs, tile-budget
+  overflows) fall back to reference.
 * ``"auto"`` — follow the SPADE decision recorded in ``plan.dispatch``.
 
 ``apply_unet`` runs the whole SCN U-Net off a ``ScenePlan``; it is pure in
@@ -74,7 +79,9 @@ def sparse_conv(
     raw = run_sspnna_conv(
         x, params.weight, plan.tiles.out_rows, plan.tiles.in_rows,
         plan.tiles.local_idx, n_out=plan.coir.mask.shape[0],
-        use_kernel=use_kernel, interpret=interpret, block_n=block_n)
+        pair_counts=plan.tiles.pair_counts,
+        use_kernel=use_kernel, interpret=interpret,
+        block_n=block_n or (plan.dispatch.block_n or None))
     out = raw.astype(x.dtype) + params.bias.astype(x.dtype)
     return out * plan.coir.mask[:, None].astype(out.dtype)
 

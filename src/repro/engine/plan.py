@@ -40,13 +40,19 @@ from repro.core.host_meta import (
     transposed_coir_np,
 )
 from repro.core.soar import raster_order, soar_order
-from repro.core.tiles import build_tile_plan, max_tiles
+from repro.core.tiles import build_tile_plan, dma_tile_tables, max_tiles
 from repro.sparse.tensor import SparseVoxelTensor
 
 REFERENCE = "reference"
 SSPNNA = "sspnna"
 
 _K_SUB = 27  # submanifold 3^3 kernel volume
+
+# Layout version of the plan's array leaves; mixed into every PlanCache key
+# so cached plans from an older table layout can never be served to a kernel
+# expecting the new one. v2: TileArrays carries DMA-table-layout rows plus
+# pair_counts for the fused kernel's dead-tile skip.
+_PLAN_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -59,17 +65,22 @@ class Dispatch:
     delta_o: int = 0
     delta_i: int = 0
     n_tiles: int = 0
+    block_n: int = 0  # pinned kernel N-block (0 = full N); see autotune_block_n
 
 
 REFERENCE_DISPATCH = Dispatch()
 
 
 class TileArrays(NamedTuple):
-    """Device-side tile metadata (``core.tiles.TilePlan`` as jax arrays)."""
+    """Device-side tile metadata in DMA-table layout
+    (``core.tiles.dma_tile_tables``): ``in_rows`` pad slots are clamped to a
+    safe source row, ``out_rows`` pad slots point at the trash row ``n_out``,
+    and ``pair_counts`` is the fused kernel's dead-tile predicate."""
 
-    out_rows: jax.Array   # (T, dO)
-    in_rows: jax.Array    # (T, dI)
-    local_idx: jax.Array  # (T, dO, K)
+    out_rows: jax.Array     # (T, dO) int32, pads -> n_out (trash row)
+    in_rows: jax.Array      # (T, dI) int32, pads clamped to 0
+    local_idx: jax.Array    # (T, dO, K) int32, -1 holes
+    pair_counts: jax.Array  # (T,) int32; 0 => dead tile
 
 
 @jax.tree_util.register_pytree_node_class
@@ -183,8 +194,10 @@ class PlanCache:
         """Cache key for scene ``t`` under ``cfg`` + build mode: the same
         geometry under a different config/spec is a different plan. The key
         is an O(V) content hash — callers on a hot path should compute it
-        once and pass it back via ``key=``."""
-        tag = f"{cfg!r}|{sorted(build_kw.items())!r}"
+        once and pass it back via ``key=``. The table-layout version is
+        mixed in so a layout bump invalidates every previously cached
+        plan."""
+        tag = f"v{_PLAN_VERSION}|{cfg!r}|{sorted(build_kw.items())!r}"
         return scene_key(t, tag)
 
     def get_or_build(self, t: SparseVoxelTensor, cfg, *, device: bool = True,
@@ -322,6 +335,7 @@ def build_plan_spec(
     order: str = "soar",
     soar_chunk: int = 512,
     tile_margin: float = 2.0,
+    tune_block_n=None,
 ) -> PlanSpec:
     """Freeze per-level dispatch decisions from representative scenes.
 
@@ -330,6 +344,12 @@ def build_plan_spec(
     once, and pin the winning dataflow. Tile budgets take the analytic bound
     capped at ``tile_margin`` times the worst observed count, so per-scene
     plans keep their static shapes without drowning in padding tiles.
+
+    ``tune_block_n`` is an optional ``(c_in, n_out, delta_o, delta_i) -> int``
+    hook (e.g. ``benchmarks.common.autotune_block_n``) that picks the fused
+    kernel's N-block per layer signature; the choice is pinned in each
+    level's ``Dispatch.block_n`` so every plan built from this spec runs the
+    tuned block instead of defaulting to full-N.
     """
     offs3 = kernel_offsets(3)
     n_levels = len(cfg.widths)
@@ -363,15 +383,20 @@ def build_plan_spec(
             bound = max_tiles(cfg.capacity, d.delta_o, d.delta_i, _K_SUB)
             n_tiles = min(bound,
                           int(np.ceil(tile_margin * observed_tiles[li])) + 2)
+            block_n = (int(tune_block_n(cfg.widths[li], cfg.widths[li],
+                                        d.delta_o, d.delta_i))
+                       if tune_block_n is not None else 0)
             d = Dispatch(d.backend, d.flavor, d.walk, d.delta_o, d.delta_i,
-                         n_tiles)
+                         n_tiles, block_n)
         dispatches.append(d)
     return PlanSpec(tuple(dispatches))
 
 
-def _tile_arrays(cirf_indices, ordering, dispatch: Dispatch) -> TileArrays | None:
-    """Build fixed-shape tile metadata for one conv; None on budget overflow
-    (callers fall back to the reference dispatch)."""
+def _tile_arrays(cirf_indices, ordering, dispatch: Dispatch,
+                 n_out: int) -> TileArrays | None:
+    """Build fixed-shape tile metadata (DMA-table layout) for one conv;
+    None on budget overflow or when the plan needs shared-output-row tiles
+    the fused kernel can't serve (callers fall back to reference)."""
     try:
         tp = build_tile_plan(
             np.asarray(cirf_indices), ordering, dispatch.delta_o,
@@ -379,8 +404,11 @@ def _tile_arrays(cirf_indices, ordering, dispatch: Dispatch) -> TileArrays | Non
             n_tiles=dispatch.n_tiles if dispatch.n_tiles else None)
     except ValueError:
         return None
-    return TileArrays(np.asarray(tp.out_rows), np.asarray(tp.in_rows),
-                      np.asarray(tp.local_idx))
+    if tp.n_row_splits:  # fused output DMA overwrites; can't share rows
+        return None
+    dma = dma_tile_tables(tp, n_out)
+    return TileArrays(dma.out_rows, dma.in_rows,
+                      np.asarray(tp.local_idx), dma.pair_counts)
 
 
 def conv_plan_for_layer(
@@ -392,11 +420,20 @@ def conv_plan_for_layer(
     walk: str = "OS",
     n_tiles: int | None = None,
 ) -> ConvPlan:
-    """Tiled ConvPlan for a standalone conv site (benchmarks / tests)."""
+    """Tiled ConvPlan for a standalone conv site (benchmarks / tests).
+
+    Plane-split plans (``delta_i`` < kernel volume forcing shared output
+    rows) are rejected here — pick a working-set budget that fits one row.
+    """
     tp = build_tile_plan(np.asarray(coir.indices), ordering, delta_o, delta_i,
                          n_tiles=n_tiles)
-    tiles = TileArrays(jnp.asarray(tp.out_rows), jnp.asarray(tp.in_rows),
-                       jnp.asarray(tp.local_idx))
+    if tp.n_row_splits:
+        raise ValueError(
+            f"delta_i={delta_i} forces {tp.n_row_splits} plane-split tiles; "
+            "the fused kernel needs disjoint output rows — raise delta_i")
+    dma = dma_tile_tables(tp, int(coir.mask.shape[0]))
+    tiles = TileArrays(jnp.asarray(dma.out_rows), jnp.asarray(dma.in_rows),
+                       jnp.asarray(tp.local_idx), jnp.asarray(dma.pair_counts))
     return ConvPlan(coir, tiles,
                     Dispatch(SSPNNA, "CIRF", walk, delta_o, delta_i,
                              tp.n_tiles))
@@ -515,7 +552,8 @@ def _build_scene_plan(
                 if spec is not None:
                     ordering = _order_rows(sub_coir, coords, mask, order,
                                            soar_chunk)
-                tiles = _tile_arrays(sub_coir.indices, ordering, dispatch)
+                tiles = _tile_arrays(sub_coir.indices, ordering, dispatch,
+                                     int(np.asarray(mask).shape[0]))
                 if tiles is None:  # tile budget overflow: coarse dispatch
                     info["tile_overflow"] = True
                     dispatch = REFERENCE_DISPATCH
@@ -524,7 +562,7 @@ def _build_scene_plan(
                     dispatch = Dispatch(
                         dispatch.backend, dispatch.flavor, dispatch.walk,
                         dispatch.delta_o, dispatch.delta_i,
-                        int(tiles.out_rows.shape[0]))
+                        int(tiles.out_rows.shape[0]), dispatch.block_n)
         info["dispatch"] = dispatch
         stats.append(info)
         levels.append(LevelPlan(coords, mask, ConvPlan(sub_coir, tiles, dispatch),

@@ -2,22 +2,37 @@
 
 Semantics: for tile t, output slot o, weight plane k, the partner feature is
 ``feats[t, local_idx[t, o, k]]`` (zeros when the index is -1); the output is
-the sum over planes of partner @ weight[k], accumulated in f32.
+the contraction of the gathered ``(dO, K, C)`` block with the ``(K, C, N)``
+weights, accumulated in f32.
+
+The contraction is written as a single flattened ``(dO, K*C) @ (K*C, N)``
+``dot_general`` — the same reduction the kernels perform after their
+``(dO*K, dI)`` partial-permutation gather matmul — so the Pallas paths are
+**bitwise identical** to this oracle on CPU (the fused-kernel property
+tests assert exact equality, not allclose). An einsum over ``(k, c)``
+jointly is the same math but XLA may reduce it in a different order, which
+is why the flattened form is the pinned spec.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
 def sspnna_tile_ref(feats, local_idx, weights):
-    """feats: (T, dI, C); local_idx: (T, dO, K); weights: (K, C, N)
+    """feats: (T, dI, C); local_idx: (T, dO, K) -1 holes; weights: (K, C, N)
     -> (T, dO, N) in feats.dtype."""
     valid = local_idx >= 0
     idx = jnp.maximum(local_idx, 0)
     # (T, 1, dI, C) gathered along dI by (T, dO, K, 1) -> (T, dO, K, C)
     gathered = jnp.take_along_axis(feats[:, None, :, :], idx[..., None], axis=2)
     gathered = jnp.where(valid[..., None], gathered, 0)
-    out = jnp.einsum(
-        "tokc,kcn->ton", gathered, weights, preferred_element_type=jnp.float32
+    t, d_o, k, c = gathered.shape
+    n = weights.shape[2]
+    out = jax.lax.dot_general(
+        gathered.reshape(t, d_o, k * c),
+        weights.reshape(k * c, n),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )
     return out.astype(feats.dtype)

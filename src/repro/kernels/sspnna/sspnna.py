@@ -1,18 +1,28 @@
-"""SSpNNA tile kernel: fused gather-GEMM over weight planes (Pallas, TPU).
+"""SSpNNA kernels: fused gather-GEMM-scatter over weight planes (Pallas, TPU).
 
-TPU adaptation of the SSpNNA core (§IV-D):
+TPU adaptation of the SSpNNA core (§IV-D, §V-A):
 
+* **DMA front-end** (§V-A-3): the fused kernel takes the *global* ``(V, C)``
+  feature array plus scalar-prefetched ``in_rows``/``out_rows`` DMA tables
+  (``pltpu.PrefetchScalarGridSpec``) and streams each tile's working set
+  HBM→VMEM with per-voxel async copies — the unordered-datatype DMA engine.
+  Tile *t+1*'s gather is issued before tile *t*'s MACs run (manual double
+  buffering over a 2-slot VMEM working-set scratch), and tile outputs are
+  DMA'd straight to their global rows (ordered-datatype engine) — no
+  ``(T, dI, C)`` HBM intermediate, no post-kernel scatter.
 * **WAVES front-end** (weight-plane active-voxel scheduling): the tile's
-  COIR block ``local_idx`` already names, per output slot and weight plane,
-  the partner row in the tile-local feature buffer. The kernel converts each
-  plane's index column into a partial-permutation one-hot matrix on the VPU
-  (compare-against-iota + select) — this is the pair-selection logic that
-  WAVES' smart-lookup performs, 4 voxels/cycle, on the ASIC.
-* **SyMAC back-end** (systolic + multicast MACs): both the gather
-  (``onehot @ feats``) and the per-plane contraction (``gathered @ W[k]``)
-  run on the MXU with f32 accumulation kept VMEM-resident across all K
-  planes — the MXU's operand broadcast plays SyMAC's IFM multicast, and the
-  persistent accumulator is the PEs' local ACC-OFM buffering.
+  COIR block ``local_idx`` names, per output slot and weight plane, the
+  partner row in the tile-local working set. The kernel converts the whole
+  block into a single ``(dO*K, dI)`` partial-permutation one-hot matrix on
+  the VPU (compare-against-iota) — the pair-selection logic WAVES'
+  smart-lookup performs, 4 voxels/cycle, on the ASIC.
+* **SyMAC back-end** (systolic + multicast MACs): the gather
+  (``onehot @ feats``) and the plane-blocked contraction
+  (``(dO, Kb*C) @ (Kb*C, N)``) run on the MXU with f32 accumulation — the
+  MXU's operand broadcast plays SyMAC's IFM multicast. With the default
+  ``block_k=None`` the contraction is one flattened ``(K*C)`` reduction,
+  bitwise identical to ``sspnna_tile_ref``; smaller ``block_k`` bounds the
+  one-hot scratch at the cost of a per-block f32 accumulate.
 
 Why one-hot instead of a dynamic VMEM gather: TPU VMEM has no random
 scatter/gather port; a partial-permutation matmul maps irregular access onto
@@ -20,9 +30,17 @@ the systolic array at full utilization, which *is* the paper's core move —
 turn sparse bookkeeping into dense compute at M-V (here tile-level)
 granularity.
 
-Grid: (tiles, N-blocks). Per-cell VMEM: dI*C + dO*K + K*C*dN + dO*dN(f32)
-plus a dO*dI one-hot scratch — SPADE's dT budget (Eqn 1) with the one-hot
-standing in for the link-list buffer.
+Dead tiles (``pair_counts == 0`` — the budgeted serving planner pads the
+tile stack heavily) skip their DMAs and MACs entirely via ``pl.when``; their
+output rows stay on the zero-initialized trash-row buffer.
+
+Per-cell VMEM (SPADE's dT budget, Eqn 1): ``2*dI*C`` (double-buffered
+working set) + ``dO*K`` (COIR block) + ``K*C*dN`` (weight slab) + ``dO*dN``
+(output staging) plus the transient ``dO*Kb*dI`` one-hot.
+
+``sspnna_tiles`` keeps the pre-gathered ``(T, dI, C)`` stack API (used by
+the benchmark baseline and direct tests); it shares ``_tile_compute`` with
+the fused kernel, so both are bitwise identical to the oracle.
 """
 from __future__ import annotations
 
@@ -31,26 +49,51 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.runtime import resolve_interpret
 
 
-def _kernel(feats_ref, idx_ref, w_ref, out_ref, *, n_planes: int):
-    feats = feats_ref[0]          # (dI, C)
-    idx = idx_ref[0]              # (dO, K)
-    d_i = feats.shape[0]
-    d_o = idx.shape[0]
-    acc = jnp.zeros((d_o, w_ref.shape[2]), jnp.float32)
-    iota_i = jax.lax.broadcasted_iota(jnp.int32, (d_o, d_i), 1)
-    for k in range(n_planes):  # static unroll: one WAVES plane per step
-        col = idx[:, k]
+def _tile_compute(feats, idx, w, *, block_k=None):
+    """One tile's MACs: feats (dI, C), idx (dO, K) -1 holes, w (K, C, dN)
+    -> f32 (dO, dN).
+
+    A single ``(dO*Kb, dI)`` partial-permutation matmul gathers each plane
+    block's partners, then one flattened ``(Kb*C)`` contraction hits the
+    weights. ``block_k=None`` (one block) reduces over all ``K*C`` at once —
+    the bitwise-pinned oracle order; smaller blocks add one f32 accumulate
+    per extra block.
+    """
+    d_i, c = feats.shape
+    d_o, k = idx.shape
+    d_n = w.shape[2]
+    kb = block_k or k
+    parts = []
+    for k0 in range(0, k, kb):
+        kk = min(kb, k - k0)
+        col = idx[:, k0:k0 + kk].reshape(d_o * kk)
+        iota_i = jax.lax.broadcasted_iota(jnp.int32, (d_o * kk, d_i), 1)
         onehot = (col[:, None] == iota_i).astype(feats.dtype)  # VPU select
         gathered = jnp.dot(onehot, feats, preferred_element_type=jnp.float32)
-        acc = acc + jnp.dot(
-            gathered.astype(feats.dtype), w_ref[k],
+        gathered = gathered.astype(feats.dtype).reshape(d_o, kk * c)
+        parts.append(jnp.dot(
+            gathered, w[k0:k0 + kk].reshape(kk * c, d_n),
             preferred_element_type=jnp.float32,
-        )
-    out_ref[0] = acc.astype(out_ref.dtype)
+        ))
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Pre-gathered tile-stack kernel (baseline; direct (T, dI, C) API)
+# ---------------------------------------------------------------------------
+
+def _pregathered_kernel(feats_ref, idx_ref, w_ref, out_ref, *, block_k):
+    out_ref[0] = _tile_compute(
+        feats_ref[0], idx_ref[0], w_ref[...], block_k=block_k
+    ).astype(out_ref.dtype)
 
 
 def sspnna_tiles(
@@ -59,24 +102,26 @@ def sspnna_tiles(
     weights: jax.Array,    # (K, C, N)
     *,
     block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Run the SSpNNA kernel over a stack of tiles -> (T, dO, N).
+    """Run the SSpNNA kernel over a pre-gathered stack of tiles -> (T, dO, N).
 
     ``interpret`` resolves *before* the jit boundary so the cache is keyed
     on the concrete mode (late env-var changes retrace instead of being
     silently ignored)."""
     return _sspnna_tiles(feats, local_idx, weights, block_n=block_n,
-                         interpret=resolve_interpret(interpret))
+                         block_k=block_k, interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
 def _sspnna_tiles(
     feats: jax.Array,
     local_idx: jax.Array,
     weights: jax.Array,
     *,
     block_n: int | None,
+    block_k: int | None,
     interpret: bool,
 ) -> jax.Array:
     t, d_i, c = feats.shape
@@ -86,7 +131,7 @@ def _sspnna_tiles(
     assert n % bn == 0, (n, bn)
     grid = (t, n // bn)
     return pl.pallas_call(
-        functools.partial(_kernel, n_planes=k),
+        functools.partial(_pregathered_kernel, block_k=block_k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, d_i, c), lambda i, j: (i, 0, 0)),
@@ -97,3 +142,159 @@ def _sspnna_tiles(
         out_shape=jax.ShapeDtypeStruct((t, d_o, n), feats.dtype),
         interpret=interpret,
     )(feats, local_idx, weights)
+
+
+# ---------------------------------------------------------------------------
+# Fused gather-GEMM-scatter kernel (global features in, global rows out)
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(in_rows_ref, out_rows_ref, counts_ref, idx_ref, feats_hbm,
+                  zeros_hbm, w_ref, out_hbm, ws, obuf, in_sems, out_sem,
+                  *, n_tiles, block_k):
+    del zeros_hbm  # aliased into out_hbm: provides the zero/trash-row init
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    d_i = ws.shape[1]
+    d_o, bn = obuf.shape
+
+    def row_dma(tile, slot, r):
+        """Per-voxel entry of the unordered-datatype DMA table (§V-A-3)."""
+        row = in_rows_ref[tile, r]
+        return pltpu.make_async_copy(
+            feats_hbm.at[pl.ds(row, 1), :],
+            ws.at[slot, pl.ds(r, 1), :],
+            in_sems.at[slot],
+        )
+
+    def issue_gather(tile, slot):
+        jax.lax.fori_loop(
+            0, d_i, lambda r, _: (row_dma(tile, slot, r).start(), 0)[1], 0)
+
+    def wait_gather(tile, slot):
+        jax.lax.fori_loop(
+            0, d_i, lambda r, _: (row_dma(tile, slot, r).wait(), 0)[1], 0)
+
+    # N-blocks revisit the same working set: DMA choreography runs once per
+    # tile (j == 0). Double buffering: tile i+1's gather is in flight while
+    # tile i's MACs run; dead tiles (pair_counts == 0) issue nothing.
+    @pl.when(j == 0)
+    def _():
+        @pl.when((i == 0) & (counts_ref[0] > 0))
+        def _():
+            issue_gather(0, 0)
+
+        @pl.when((i + 1 < n_tiles) & (counts_ref[i + 1] > 0))
+        def _():
+            issue_gather(i + 1, (i + 1) % 2)
+
+        @pl.when(counts_ref[i] > 0)
+        def _():
+            wait_gather(i, i % 2)
+
+    @pl.when(counts_ref[i] > 0)
+    def _():
+        acc = _tile_compute(ws[i % 2], idx_ref[0], w_ref[...], block_k=block_k)
+        obuf[...] = acc.astype(obuf.dtype)
+
+        def out_dma(o):
+            # ordered-datatype DMA: each output slot streams straight to its
+            # global row (pad slots land on the trash row and are sliced off)
+            row = out_rows_ref[i, o]
+            return pltpu.make_async_copy(
+                obuf.at[pl.ds(o, 1), :],
+                out_hbm.at[pl.ds(row, 1), pl.ds(j * bn, bn)],
+                out_sem,
+            )
+
+        # start all d_o row copies, then drain: latencies overlap instead of
+        # serializing; obuf reuse is safe since every wait precedes the next
+        # grid step's write
+        jax.lax.fori_loop(0, d_o, lambda o, _: (out_dma(o).start(), 0)[1], 0)
+        jax.lax.fori_loop(0, d_o, lambda o, _: (out_dma(o).wait(), 0)[1], 0)
+
+
+def sspnna_fused(
+    feats: jax.Array,        # (V, C) global input features
+    weights: jax.Array,      # (K, C, N)
+    out_rows: jax.Array,     # (T, dO) global output rows (-1 pad ok)
+    in_rows: jax.Array,      # (T, dI) global input rows (-1 pad ok)
+    local_idx: jax.Array,    # (T, dO, K) tile-local partner indices, -1 holes
+    pair_counts: jax.Array,  # (T,) valid pairs per tile (0 => dead tile)
+    *,
+    n_out: int,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather-GEMM-scatter sparse conv -> (n_out, N) (no bias/mask).
+
+    Accepts tile tables in either the raw ``TilePlan`` layout (-1 pads) or
+    the DMA-table layout of ``core.tiles.dma_tile_tables`` — normalization
+    is idempotent integer ops. Tiles must own disjoint output rows (the
+    output DMA overwrites): plans with ``n_row_splits > 0`` need the
+    accumulating pre-gathered path instead.
+
+    ``interpret`` resolves *before* the jit boundary (see
+    ``kernels.runtime.resolve_interpret``)."""
+    return _sspnna_fused(feats, weights, out_rows, in_rows, local_idx,
+                         pair_counts, n_out=n_out, block_n=block_n,
+                         block_k=block_k,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "block_n", "block_k", "interpret"))
+def _sspnna_fused(
+    feats: jax.Array,
+    weights: jax.Array,
+    out_rows: jax.Array,
+    in_rows: jax.Array,
+    local_idx: jax.Array,
+    pair_counts: jax.Array,
+    *,
+    n_out: int,
+    block_n: int | None,
+    block_k: int | None,
+    interpret: bool,
+) -> jax.Array:
+    _, c = feats.shape
+    t, d_o, k = local_idx.shape
+    d_i = in_rows.shape[1]
+    n = weights.shape[2]
+    bn = block_n or n
+    assert n % bn == 0, (n, bn)
+    # normalize to DMA-table layout (idempotent when the caller already
+    # holds `dma_tile_tables` output): every in-entry a safe HBM source,
+    # every out-entry a real row or the trash row n_out
+    in_dma = jnp.maximum(in_rows, 0).astype(jnp.int32)
+    out_dma = jnp.where(out_rows < 0, n_out, out_rows).astype(jnp.int32)
+    counts = pair_counts.astype(jnp.int32)
+    zeros = jnp.zeros((n_out + 1, n), feats.dtype)
+    if t == 0:
+        return zeros[:n_out]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, d_o, k), lambda i, j, *_: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # feats stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # zero-init (aliased)
+            pl.BlockSpec((k, c, bn), lambda i, j, *_: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((2, d_i, c), feats.dtype),   # double-buffered dM set
+            pltpu.VMEM((d_o, bn), feats.dtype),     # output staging
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, n_tiles=t, block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out + 1, n), feats.dtype),
+        # input index 5 = zeros (scalar-prefetch args count in the numbering)
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )(in_dma, out_dma, counts, local_idx, feats, zeros, weights)
+    return out[:n_out]

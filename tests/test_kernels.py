@@ -140,7 +140,7 @@ def test_interpret_resolves_per_call_not_at_first_trace(monkeypatch):
 
     seen = {}
 
-    def fake(feats, idx, w, *, block_n, interpret):
+    def fake(feats, idx, w, *, interpret, **kw):
         seen["interpret"] = interpret
 
     monkeypatch.setattr(mod, "_sspnna_tiles", fake)
