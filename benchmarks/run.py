@@ -17,9 +17,9 @@ import sys
 import time
 
 # modules cheap enough for the CI smoke job (reduced configs, small scenes).
-# bench_serving and bench_sspnna are smoked separately (their own --quick
-# CLIs write BENCH_serving.json / BENCH_sspnna.json) so they aren't
-# duplicated here.
+# bench_serving, bench_sspnna and bench_sharded_scene are smoked separately
+# (their own --quick CLIs write BENCH_serving.json / BENCH_sspnna.json /
+# BENCH_sharded_scene.json) so they aren't duplicated here.
 QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
          "bench_dataflow")
 
@@ -42,6 +42,7 @@ def main(argv=None) -> None:
         bench_moe,
         bench_scn,
         bench_serving,
+        bench_sharded_scene,
         bench_soar,
         bench_spade_attrs,
         bench_sspnna,
@@ -49,7 +50,7 @@ def main(argv=None) -> None:
 
     modules = [bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
                bench_dataflow, bench_sspnna, bench_scn, bench_serving,
-               bench_moe, bench_lm]
+               bench_sharded_scene, bench_moe, bench_lm]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in modules}

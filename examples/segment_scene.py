@@ -8,6 +8,13 @@ every wave. By default the engine runs its async pipeline (plan builds for
 wave k+1 overlap device execution of wave k) and prints the per-stage
 timings; ``--sync`` falls back to the blocking wave loop for comparison.
 
+``--shards N`` serves each scene mesh-sharded instead: the capacity axis
+splits over an N-way mesh axis, per-shard plans (local COIR + halo send
+tables) build on the planner threads, and every conv exchanges only its
+halo rows (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+to get a real multi-device mesh on CPU; without enough devices the same
+program runs serially on one device — bitwise identical either way).
+
 Run:  PYTHONPATH=src python examples/segment_scene.py [--requests 8] [--sync]
 """
 import argparse
@@ -19,6 +26,7 @@ import numpy as np
 
 from repro import engine
 from repro.data.scenes import N_CLASSES, make_scene
+from repro.dist.compat import make_mesh
 from repro.models.scn import UNetConfig, init_unet
 from repro.serving.scene_engine import SceneEngine, SceneRequest
 from repro.sparse.tensor import SparseVoxelTensor
@@ -41,24 +49,43 @@ def main():
                          "async plan/dispatch/drain pipeline")
     ap.add_argument("--planner-threads", type=int, default=1)
     ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve mesh-sharded scenes over this many shards "
+                         "(0 = unsharded batched serving)")
     args = ap.parse_args()
 
     cfg = UNetConfig(widths=(16, 32, 48), reps=1, resolution=args.res,
                      capacity=args.cap, n_classes=N_CLASSES)
     params = init_unet(jax.random.PRNGKey(0), cfg)
 
-    # offline-SPADE: pin the per-level dataflow from representative scenes
     t0 = time.time()
     reps = [load_scene(123 + i, args.res, args.cap) for i in range(2)]
-    spec = engine.build_plan_spec(reps, cfg, mem_budget=64 * 1024)
-    for li, d in enumerate(spec.levels):
-        print(f"spec level{li}: {d.backend} walk={d.walk} "
-              f"dO={d.delta_o} dI={d.delta_i} tiles={d.n_tiles}")
-    print(f"plan spec pinned in {time.time() - t0:.1f}s")
-
-    eng = SceneEngine(cfg, params, batch=args.batch, spec=spec,
-                      sync=args.sync, depth=args.depth,
-                      planner_threads=args.planner_threads)
+    if args.shards:
+        # pin the halo budget from representative scenes (one jit signature)
+        layout = engine.pin_halo(
+            reps, cfg, engine.ShardLayout(n_shards=args.shards))
+        mesh = None
+        if len(jax.devices()) >= args.shards:
+            mesh = make_mesh((args.shards,), ("shard",),
+                             devices=jax.devices()[:args.shards])
+        ctx = engine.ExecutionContext(mesh=mesh)
+        print(f"sharded layout: {layout} on "
+              f"{'mesh' if mesh is not None else 'one device (serial)'}; "
+              f"halo budget pinned in {time.time() - t0:.1f}s")
+        eng = SceneEngine(cfg, params, batch=args.batch, ctx=ctx,
+                          layout=layout, sync=args.sync, depth=args.depth,
+                          planner_threads=args.planner_threads)
+    else:
+        # offline-SPADE: pin the per-level dataflow from representative
+        # scenes
+        spec = engine.build_plan_spec(reps, cfg, mem_budget=64 * 1024)
+        for li, d in enumerate(spec.levels):
+            print(f"spec level{li}: {d.backend} walk={d.walk} "
+                  f"dO={d.delta_o} dI={d.delta_i} tiles={d.n_tiles}")
+        print(f"plan spec pinned in {time.time() - t0:.1f}s")
+        eng = SceneEngine(cfg, params, batch=args.batch, spec=spec,
+                          sync=args.sync, depth=args.depth,
+                          planner_threads=args.planner_threads)
     t_serve = time.time()
     reqs = [SceneRequest(rid, load_scene(1000 + rid, args.res, args.cap))
             for rid in range(args.requests)]
@@ -79,6 +106,10 @@ def main():
           f"(waited {tm['plan_wait_ms']:.0f}ms) "
           f"device={tm['device_ms']:.0f}ms drain={tm['drain_ms']:.0f}ms "
           f"overlap_frac={tm['overlap_frac']:.2f}")
+    if args.shards:
+        halo = sum(st.notes.get("halo_rows", 0) for st in eng.wave_stats)
+        print(f"sharded: {args.shards}-way, "
+              f"{halo} halo rows exchanged across all waves")
 
 
 if __name__ == "__main__":

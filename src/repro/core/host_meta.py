@@ -141,6 +141,72 @@ def transposed_coir_np(
                          offs, fine_resolution, stride)
 
 
+def shard_halo_tables_np(
+    indices: np.ndarray,
+    n_shards: int,
+    halo: int = 0,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Split an out-major ``(V, K)`` COIR index block over ``n_shards``
+    contiguous capacity shards, producing per-shard local metadata plus the
+    all-to-all send tables a halo exchange consumes.
+
+    Shard ``s`` owns global rows ``[s*Vs, (s+1)*Vs)`` (``Vs = V //
+    n_shards``). An output row's receptive field may reference input rows
+    owned by other shards — the *halo*. For every (owner ``d``, consumer
+    ``s``) pair we collect the sorted unique global rows ``s`` needs from
+    ``d``; ``halo`` pads each pair slot to a fixed budget (0 = size to this
+    block's worst pair; a positive budget is validated and raised on
+    overflow so a pinned serving signature can never silently drop rows).
+
+    Returns ``(local_idx, send_rows, n_halo_rows)``:
+
+    * ``local_idx`` ``(S, Vs, K)`` int32 — the index block remapped into
+      each shard's local buffer ``concat([own rows (Vs), halo rows
+      (S*H)])``: ``[0, Vs)`` shard-local, ``Vs + d*H + j`` the j-th row
+      received from shard ``d``, ``-1`` holes (unchanged).
+    * ``send_rows`` ``(S, S, H)`` int32 — ``send_rows[d, s]`` lists the
+      rows shard ``d`` sends to shard ``s``, *local to d*; ``-1`` pads.
+    * ``n_halo_rows`` — total real (non-pad) cross-shard rows, the wire
+      traffic a halo exchange of this conv moves (x feature row bytes).
+    """
+    idx = np.asarray(indices)
+    V, _ = idx.shape
+    S = int(n_shards)
+    if S < 1 or V % S:
+        raise ValueError(
+            f"capacity {V} not divisible into {S} equal shards")
+    Vs = V // S
+    send_lists: list[list[np.ndarray]] = [[None] * S for _ in range(S)]
+    h_needed = 0
+    for s in range(S):
+        blk = idx[s * Vs:(s + 1) * Vs]
+        rows = np.unique(blk[blk >= 0])
+        remote = rows[(rows < s * Vs) | (rows >= (s + 1) * Vs)]
+        owners = remote // Vs
+        for d in range(S):
+            send_lists[d][s] = remote[owners == d]
+            h_needed = max(h_needed, len(send_lists[d][s]))
+    H = int(halo) if halo else max(h_needed, 1)
+    if h_needed > H:
+        raise ValueError(
+            f"halo budget {H} rows/pair < required {h_needed}; raise the "
+            "ShardLayout halo (or re-pin it from representative scenes)")
+    send_rows = np.full((S, S, H), -1, np.int32)
+    local_idx = np.empty((S, Vs, len(idx[0])), np.int32)
+    n_halo = 0
+    for s in range(S):
+        glob2loc = np.full((V,), -1, np.int32)
+        glob2loc[s * Vs:(s + 1) * Vs] = np.arange(Vs, dtype=np.int32)
+        for d in range(S):
+            rows = send_lists[d][s]
+            n_halo += len(rows)
+            send_rows[d, s, :len(rows)] = (rows - d * Vs).astype(np.int32)
+            glob2loc[rows] = Vs + d * H + np.arange(len(rows), dtype=np.int32)
+        blk = idx[s * Vs:(s + 1) * Vs]
+        local_idx[s] = np.where(blk >= 0, glob2loc[np.maximum(blk, 0)], -1)
+    return local_idx, send_rows, n_halo
+
+
 def downsample_coords_np(
     coords: np.ndarray,
     mask: np.ndarray,

@@ -75,8 +75,11 @@ def sparse_conv_cirf(
         DeprecationWarning, stacklevel=2)
     from repro.engine import api as engine_api  # local: engine imports us
 
+    # omitting ctx= dispatches through the ambient ExecutionContext's
+    # registry, exactly like a modern call site
     return engine_api.sparse_conv(
-        feats_in, params, engine_api.reference_plan(coir), backend="reference")
+        feats_in, params, engine_api.reference_plan(coir),
+        backend="reference")
 
 
 def masked_batchnorm_relu(x, mask, scale, offset, eps: float = 1e-5):

@@ -14,7 +14,12 @@ runs execute the same code path the 512-chip dry-run lowers.
 * ``pipeline``    — ``stack_stages`` / ``pipeline_apply``: GPipe-style
   stage-stacked pipeline execution over a ``"pipe"`` mesh axis.
 """
-from repro.dist.collectives import compressed_psum, expert_all_to_all
+from repro.dist.collectives import (
+    compressed_psum,
+    expert_all_to_all,
+    halo_exchange,
+    halo_exchange_local,
+)
 from repro.dist.hints import DP, active_mesh, constrain, use_mesh
 from repro.dist.pipeline import pipeline_apply, stack_stages
 from repro.dist.sharding import ShardingRules
@@ -26,6 +31,8 @@ __all__ = [
     "compressed_psum",
     "constrain",
     "expert_all_to_all",
+    "halo_exchange",
+    "halo_exchange_local",
     "pipeline_apply",
     "stack_stages",
     "use_mesh",

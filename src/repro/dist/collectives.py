@@ -1,4 +1,4 @@
-"""Compressed cross-pod collectives + expert-parallel all-to-all.
+"""Compressed cross-pod collectives, expert a2a, and scene halo exchange.
 
 ``compressed_psum`` wires ``training.grad_compress``'s error-feedback int8
 quantizer around the data-parallel gradient reduction: each device
@@ -14,6 +14,17 @@ numerics that ship.
 relies on activations being replicated over the model axis), tokens are
 exchanged expert-major across the expert-parallel axis with
 ``lax.all_to_all``. Identity on a 1-device axis.
+
+``halo_exchange`` moves the *halo rows* of a mesh-sharded sparse scene:
+each shard owns a contiguous block of the capacity axis, and a sparse
+conv's receptive fields reach into rows other shards own. The plan pass
+(``core.host_meta.shard_halo_tables_np``) decides host-side exactly which
+rows cross which link; at execution time only those rows ride a single
+``all_to_all`` — the wire analogue of AccSS3D keeping the irregular gather
+on-chip. ``halo_exchange_local`` is the inside-SPMD form
+(``engine.shard`` calls it per conv, under ``shard_map`` or under
+``vmap(axis_name=...)`` for the bitwise-identical single-device reference
+path).
 """
 from __future__ import annotations
 
@@ -68,6 +79,46 @@ def compressed_psum(mesh, grads, axis: str = "pod", error_state=None):
         out_specs=(_replicated_specs(grads), _replicated_specs(grads)))
     summed, new_err = fn(grads, error_state)
     return (summed, new_err) if with_err else summed
+
+
+def halo_exchange_local(feats, send_rows, axis: str = "shard"):
+    """Exchange halo feature rows across the shard axis (inside-SPMD form).
+
+    ``feats`` is this shard's ``(Vs, C)`` block; ``send_rows`` its ``(S,
+    H)`` send table — ``send_rows[d]`` lists the local rows shard ``d``
+    needs (``-1`` pads, which arrive as zero rows; plan-built index blocks
+    never reference pad slots). Returns ``(S, H, C)``: row block ``d`` is
+    what shard ``d`` sent *us*, so a consumer's local buffer is
+    ``concat([feats, recv.reshape(S*H, C)])`` — exactly the layout
+    ``shard_halo_tables_np`` coded its local indices against.
+
+    Pure data movement (one tiled ``all_to_all``): bitwise-exact, and
+    valid under ``shard_map`` or ``vmap(axis_name=axis)`` alike.
+    """
+    payload = jnp.where((send_rows >= 0)[..., None],
+                        jnp.take(feats, jnp.maximum(send_rows, 0), axis=0),
+                        0)
+    return jax.lax.all_to_all(payload, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def halo_exchange(mesh, feats, send_rows, axis: str = "shard"):
+    """Mesh-level halo exchange over stacked shard blocks.
+
+    ``feats`` ``(S, Vs, C)`` and ``send_rows`` ``(S, S, H)`` are sharded
+    over ``axis`` on dim 0; returns ``(S, S, H, C)`` where ``out[s, d]``
+    holds the rows shard ``s`` received from shard ``d`` (zero rows at
+    ``-1`` pads). Thin ``shard_map`` wrapper around
+    :func:`halo_exchange_local` for tests and standalone use.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+
+    def local(f, sr):
+        return halo_exchange_local(f[0], sr[0], axis)[None]
+
+    return shard_map(local, mesh, in_specs=(P(axis), P(axis)),
+                     out_specs=P(axis))(feats, send_rows)
 
 
 def expert_all_to_all(mesh, x, axis: str = "model",

@@ -1,50 +1,60 @@
 """One plan-driven entry point for sparse convolution.
 
-``sparse_conv(x, params, plan, backend=...)`` is the execution API the rest
-of the repo programs against; the COIR metadata, SOAR ordering, SPADE
-dataflow decision and SSpNNA tile tables all arrive pre-packaged in the
-``ConvPlan`` (see ``repro.engine.plan``), so call sites never re-derive
+``sparse_conv(x, params, plan, backend=..., ctx=...)`` is the execution API
+the rest of the repo programs against; the COIR metadata, SOAR ordering,
+SPADE dataflow decision and SSpNNA tile tables all arrive pre-packaged in
+the ``ConvPlan`` (see ``repro.engine.plan``), so call sites never re-derive
 them — the paper's co-design, surfaced as one function.
 
-Backend dispatch rules:
+Dispatch goes through the backend registry (``repro.engine.backends``):
+``Dispatch``/SPADE emit a backend *name*, the context's registry resolves
+it to an implementation (following declared fallbacks — e.g. an SSpNNA
+decision whose plan lost its tile metadata degrades to ``reference``), and
+new paths plug in via ``engine.register_backend`` without touching this
+module. The built-ins:
 
 * ``"reference"`` — gather + one fused einsum over all weight planes
   (``core.sparse_conv.reference_conv_cirf``), the coarse M-V dispatch and
   the numerical oracle.
 * ``"sspnna"`` — the fused gather-GEMM-scatter Pallas path
-  (``kernels.sspnna``) driven by the plan's ``TileArrays``: global features
-  go straight into the kernel, whose scalar-prefetched DMA tables stream
-  tile working sets on-chip and write output rows in place — no gathered
-  HBM intermediate, no post-kernel scatter. ``Dispatch.block_n`` (pinned by
-  ``build_plan_spec(tune_block_n=...)``) selects the kernel's N-block.
-  Plans without tile metadata (resolution-changing convs, tile-budget
-  overflows) fall back to reference.
-* ``"auto"`` — follow the SPADE decision recorded in ``plan.dispatch``.
+  (``kernels.sspnna``) driven by the plan's ``TileArrays``.
+* ``"sharded"`` — mesh-sharded scene execution with halo exchange
+  (``engine.shard``); scene-level, reached via ``apply_unet`` on a
+  ``ShardedScenePlan``.
+* ``"auto"`` — follow the decision recorded in ``plan.dispatch``.
+
+``ctx=`` names the :class:`~repro.engine.context.ExecutionContext` (mesh,
+registry view, plan cache) the call runs under; omitted, the ambient
+context applies, so pre-context call sites keep working.
 
 ``apply_unet`` runs the whole SCN U-Net off a ``ScenePlan``; it is pure in
 (params, feats, plan) and vmap/jit-friendly — the serving engine batches it
-with a leading scene axis.
+with a leading scene axis. Plans that carry a ``scene_backend`` attribute
+(``ShardedScenePlan``) are handed whole to that backend's ``run_unet``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.coir import COIR
-from repro.core.sparse_conv import (
-    SparseConvParams,
-    masked_batchnorm_relu,
-    reference_conv_cirf,
-)
-from repro.engine.plan import (
-    REFERENCE,
-    REFERENCE_DISPATCH,
-    SSPNNA,
-    ConvPlan,
-    ScenePlan,
-)
-from repro.kernels.sspnna.ops import run_sspnna_conv
+from repro.core.sparse_conv import SparseConvParams, masked_batchnorm_relu
+from repro.engine.backends import AUTO, default_registry
+from repro.engine.context import ExecutionContext, current_context
+from repro.engine.plan import REFERENCE_DISPATCH, ConvPlan, ScenePlan
 
-BACKENDS = ("auto", REFERENCE, SSPNNA)
+
+def __getattr__(name: str):
+    # legacy alias for the closed enum this module used to hard-code;
+    # computed on access so late registrations show up
+    if name == "BACKENDS":
+        return (AUTO,) + default_registry().names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def available_backends(ctx: ExecutionContext | None = None) -> tuple[str, ...]:
+    """Backend names resolvable under ``ctx`` (ambient context if None)."""
+    ctx = ctx if ctx is not None else current_context()
+    return (AUTO,) + ctx.registry.names()
 
 
 def reference_plan(coir: COIR) -> ConvPlan:
@@ -52,15 +62,12 @@ def reference_plan(coir: COIR) -> ConvPlan:
     return ConvPlan(coir, None, REFERENCE_DISPATCH)
 
 
-def resolve_backend(plan: ConvPlan, backend: str = "auto") -> str:
-    """The backend a call will actually run, after plan-driven dispatch."""
-    if backend not in BACKENDS:
-        raise ValueError(f"backend {backend!r} not one of {BACKENDS}")
-    if backend == "auto":
-        backend = plan.dispatch.backend
-    if backend == SSPNNA and plan.tiles is None:
-        return REFERENCE
-    return backend
+def resolve_backend(plan: ConvPlan, backend: str = AUTO,
+                    ctx: ExecutionContext | None = None) -> str:
+    """The backend a call will actually run, after plan-driven dispatch
+    and fallback resolution through the context's registry."""
+    ctx = ctx if ctx is not None else current_context()
+    return ctx.registry.resolve(plan, backend)
 
 
 def sparse_conv(
@@ -68,22 +75,18 @@ def sparse_conv(
     params: SparseConvParams,
     plan: ConvPlan,
     *,
-    backend: str = "auto",
+    backend: str = AUTO,
+    ctx: ExecutionContext | None = None,
     use_kernel: bool = True,
     interpret: bool | None = None,
     block_n: int | None = None,
 ) -> jnp.ndarray:
     """Run one sparse conv according to its plan -> (V_out, N) features."""
-    if resolve_backend(plan, backend) == REFERENCE:
-        return reference_conv_cirf(x, plan.coir, params)
-    raw = run_sspnna_conv(
-        x, params.weight, plan.tiles.out_rows, plan.tiles.in_rows,
-        plan.tiles.local_idx, n_out=plan.coir.mask.shape[0],
-        pair_counts=plan.tiles.pair_counts,
-        use_kernel=use_kernel, interpret=interpret,
-        block_n=block_n or (plan.dispatch.block_n or None))
-    out = raw.astype(x.dtype) + params.bias.astype(x.dtype)
-    return out * plan.coir.mask[:, None].astype(out.dtype)
+    ctx = ctx if ctx is not None else current_context()
+    name = ctx.registry.resolve(plan, backend)
+    return ctx.registry.get(name).run(
+        x, params, plan, ctx=ctx, use_kernel=use_kernel, interpret=interpret,
+        block_n=block_n)
 
 
 def conv_block(x, mask, plan: ConvPlan, p, **conv_kw):
@@ -95,14 +98,32 @@ def conv_block(x, mask, plan: ConvPlan, p, **conv_kw):
 def apply_unet(
     params: dict,
     feats: jnp.ndarray,
-    plan: ScenePlan,
+    plan: "ScenePlan",
     *,
-    backend: str = "auto",
+    backend: str = AUTO,
+    ctx: ExecutionContext | None = None,
     use_kernel: bool = True,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """U-Net forward off a ScenePlan -> (V, n_classes) level-0 logits."""
-    kw = dict(backend=backend, use_kernel=use_kernel, interpret=interpret)
+    """U-Net forward off a ScenePlan -> (V, n_classes) level-0 logits.
+
+    Plans carrying a ``scene_backend`` attribute (e.g. ``ShardedScenePlan``)
+    are executed whole by that backend's ``run_unet`` hook — the level walk
+    below only serves per-conv plans.
+    """
+    ctx = ctx if ctx is not None else current_context()
+    scene_backend = getattr(plan, "scene_backend", None)
+    if scene_backend is not None:
+        if backend not in (AUTO, scene_backend):
+            raise ValueError(
+                f"plan is bound to scene-level backend {scene_backend!r}; "
+                f"backend={backend!r} cannot serve it")
+        impl = ctx.registry.get(scene_backend)
+        return impl.run_unet(params, feats, plan, ctx=ctx,
+                             use_kernel=use_kernel, interpret=interpret)
+
+    kw = dict(backend=backend, ctx=ctx, use_kernel=use_kernel,
+              interpret=interpret)
     x = sparse_conv(feats, params["stem"], plan.levels[0].sub, **kw)
     skips = []
     for li, lvl in enumerate(plan.levels):

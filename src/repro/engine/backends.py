@@ -1,0 +1,215 @@
+"""Backend registry: pluggable execution paths behind one dispatcher.
+
+AccSS3D's co-design premise is that metadata and execution are decided
+together — SPADE emits a *dataflow decision*, and the engine maps it onto an
+execution path. Pre-registry, that mapping was a closed string enum and an
+if/elif chain in ``engine.api``; every new path (sharded scenes, future
+TPU-tuned kernels) meant editing the dispatcher. Now the seam is explicit:
+
+* a ``Backend`` implements ``supports(plan)`` / ``run(x, params, plan,
+  ctx=...)`` (and optionally ``run_unet`` for scene-level paths that own the
+  whole forward, e.g. mesh-sharded execution);
+* a ``BackendRegistry`` resolves the *name* recorded in a plan's
+  ``Dispatch`` to an implementation, following each backend's declared
+  ``fallback`` when a plan lacks what the backend needs (the classic case:
+  an SSpNNA decision whose tile budget overflowed falls back to the
+  reference einsum);
+* registries chain: ``registry.view()`` makes a scoped child, so an
+  ``ExecutionContext`` can overlay experimental backends without mutating
+  the process-wide default registry.
+
+``Dispatch``/SPADE emit backend *names*; nothing in the planner or the
+dispatcher enumerates implementations, so a new backend registers from
+anywhere (``engine.register_backend``) and is immediately routable.
+"""
+from __future__ import annotations
+
+from repro.core.sparse_conv import reference_conv_cirf
+from repro.engine.plan import REFERENCE, SSPNNA, ConvPlan
+from repro.kernels.sspnna.ops import run_sspnna_conv
+
+AUTO = "auto"
+
+
+class Backend:
+    """One execution path for plan-driven sparse convolution.
+
+    Subclasses set ``name`` (the registry key ``Dispatch.backend`` refers
+    to), optionally ``plan_requirements`` (plan attributes that must be
+    non-None for ``run`` to serve the plan) and ``fallback`` (the registry
+    name resolution degrades to when ``supports`` says no).
+
+    ``run`` executes one conv site. Scene-level backends (which own the
+    whole U-Net forward, e.g. mesh-sharded execution) additionally
+    implement ``run_unet``; ``engine.apply_unet`` routes plans that carry a
+    ``scene_backend`` attribute there instead of walking levels itself.
+    """
+
+    name: str = ""
+    #: plan attributes that must be present (non-None) for run() to work
+    plan_requirements: tuple[str, ...] = ()
+    #: registry name to resolve to instead when supports() is False
+    fallback: str | None = None
+    #: True for backends that execute whole scenes via run_unet
+    scene_level: bool = False
+
+    def supports(self, plan) -> bool:
+        return all(getattr(plan, req, None) is not None
+                   for req in self.plan_requirements)
+
+    def run(self, x, params, plan: ConvPlan, *, ctx, **kw):
+        raise NotImplementedError(
+            f"backend {self.name!r} does not implement per-conv run()")
+
+    def run_unet(self, params, feats, plan, *, ctx, **kw):
+        raise NotImplementedError(
+            f"backend {self.name!r} does not implement scene-level run_unet()")
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class BackendRegistry:
+    """Name -> Backend mapping with parent chaining and fallback resolution.
+
+    Lookup walks ``self`` then ``parent``; registration always writes to
+    ``self``, so a ``view()`` child can shadow or extend the process
+    default without mutating it (an ``ExecutionContext`` holds such a
+    view).
+    """
+
+    def __init__(self, parent: "BackendRegistry | None" = None):
+        self._impls: dict[str, Backend] = {}
+        self._parent = parent
+
+    def register(self, name: str, impl: Backend, *,
+                 overwrite: bool = False) -> Backend:
+        if not name or name == AUTO:
+            raise ValueError(f"invalid backend name {name!r}")
+        if not overwrite and name in self:
+            raise ValueError(
+                f"backend {name!r} already registered; pass overwrite=True "
+                "to replace it")
+        if not callable(getattr(impl, "run", None)):
+            raise TypeError(f"backend impl {impl!r} has no run() hook")
+        self._impls[name] = impl
+        return impl
+
+    def unregister(self, name: str) -> None:
+        """Remove a registration made on *this* registry (not the parent)."""
+        self._impls.pop(name, None)
+
+    def get(self, name: str) -> Backend:
+        reg: BackendRegistry | None = self
+        while reg is not None:
+            impl = reg._impls.get(name)
+            if impl is not None:
+                return impl
+            reg = reg._parent
+        raise ValueError(
+            f"backend {name!r} not one of {(AUTO,) + self.names()}")
+
+    def names(self) -> tuple[str, ...]:
+        seen: dict[str, None] = {}
+        reg: BackendRegistry | None = self
+        while reg is not None:
+            for n in reg._impls:
+                seen.setdefault(n)
+            reg = reg._parent
+        return tuple(sorted(seen))
+
+    def __contains__(self, name: str) -> bool:
+        reg: BackendRegistry | None = self
+        while reg is not None:
+            if name in reg._impls:
+                return True
+            reg = reg._parent
+        return False
+
+    def view(self) -> "BackendRegistry":
+        """A scoped child registry: reads chain to this one, writes stay
+        local. This is what a fresh ``ExecutionContext`` holds."""
+        return BackendRegistry(parent=self)
+
+    def resolve(self, plan, backend: str = AUTO) -> str:
+        """The backend name a call will actually run.
+
+        ``"auto"`` reads the name the planner recorded in
+        ``plan.dispatch``; a backend that can't serve the plan degrades
+        along its declared ``fallback`` chain (e.g. SSpNNA without tile
+        metadata -> reference).
+        """
+        if backend == AUTO:
+            backend = plan.dispatch.backend
+        impl = self.get(backend)  # raises ValueError on unknown names
+        seen = {backend}
+        while not impl.supports(plan):
+            if impl.fallback is None or impl.fallback in seen:
+                raise ValueError(
+                    f"backend {backend!r} cannot serve this plan and "
+                    "declares no (acyclic) fallback")
+            backend = impl.fallback
+            seen.add(backend)
+            impl = self.get(backend)
+        return backend
+
+
+class ReferenceBackend(Backend):
+    """Gather + one fused einsum over all weight planes — the coarse M-V
+    dispatch and the numerical oracle (``core.sparse_conv``)."""
+
+    name = REFERENCE
+
+    def run(self, x, params, plan: ConvPlan, *, ctx, **kw):
+        del ctx, kw  # kernel knobs don't apply to the einsum path
+        return reference_conv_cirf(x, plan.coir, params)
+
+
+class SSpNNABackend(Backend):
+    """The fused gather-GEMM-scatter Pallas path driven by the plan's
+    ``TileArrays`` (see ``kernels.sspnna``); plans without tile metadata
+    (resolution-changing convs, tile-budget overflows) fall back to
+    reference."""
+
+    name = SSPNNA
+    plan_requirements = ("tiles",)
+    fallback = REFERENCE
+
+    def run(self, x, params, plan: ConvPlan, *, ctx,
+            use_kernel: bool = True, interpret: bool | None = None,
+            block_n: int | None = None, **kw):
+        del ctx, kw
+        raw = run_sspnna_conv(
+            x, params.weight, plan.tiles.out_rows, plan.tiles.in_rows,
+            plan.tiles.local_idx, n_out=plan.coir.mask.shape[0],
+            pair_counts=plan.tiles.pair_counts,
+            use_kernel=use_kernel, interpret=interpret,
+            block_n=block_n or (plan.dispatch.block_n or None))
+        out = raw.astype(x.dtype) + params.bias.astype(x.dtype)
+        return out * plan.coir.mask[:, None].astype(out.dtype)
+
+
+_DEFAULT_REGISTRY: BackendRegistry | None = None
+
+
+def default_registry() -> BackendRegistry:
+    """The process-wide registry ``reference``/``sspnna`` (and ``sharded``,
+    registered by ``engine.shard`` on import) live on."""
+    global _DEFAULT_REGISTRY
+    if _DEFAULT_REGISTRY is None:
+        _DEFAULT_REGISTRY = BackendRegistry()
+        _DEFAULT_REGISTRY.register(REFERENCE, ReferenceBackend())
+        _DEFAULT_REGISTRY.register(SSPNNA, SSpNNABackend())
+    return _DEFAULT_REGISTRY
+
+
+def register_backend(name: str, impl: Backend, *,
+                     overwrite: bool = False) -> Backend:
+    """Register an execution backend process-wide.
+
+    After this, any plan whose ``Dispatch.backend`` names ``name`` (or any
+    explicit ``backend=name`` call) routes to ``impl`` — no engine code
+    changes needed. Scoped alternative: register on
+    ``ExecutionContext.registry`` to confine the backend to one context.
+    """
+    return default_registry().register(name, impl, overwrite=overwrite)

@@ -51,8 +51,10 @@ _K_SUB = 27  # submanifold 3^3 kernel volume
 # Layout version of the plan's array leaves; mixed into every PlanCache key
 # so cached plans from an older table layout can never be served to a kernel
 # expecting the new one. v2: TileArrays carries DMA-table-layout rows plus
-# pair_counts for the fused kernel's dead-tile skip.
-_PLAN_VERSION = 2
+# pair_counts for the fused kernel's dead-tile skip. v3: keys additionally
+# carry the execution topology (mesh axes + shard layout), so a plan built
+# for one mesh can never be served to another.
+_PLAN_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -123,6 +125,11 @@ class ScenePlan:
     def n_levels(self) -> int:
         return len(self.levels)
 
+    def device_upload(self) -> "ScenePlan":
+        """Device copy of a host-built plan (``PlanCache`` memoizes this;
+        plan types with different leaves override it)."""
+        return upload_scene_plan(self)
+
     def tree_flatten(self):
         return (tuple(self.levels),), None
 
@@ -187,27 +194,39 @@ class PlanCache:
         if entry["device"] is None:
             with entry["dev_lock"]:
                 if entry["device"] is None:
-                    entry["device"] = upload_scene_plan(entry["host"])
+                    entry["device"] = entry["host"].device_upload()
         return entry["device"]
 
-    def key_for(self, t: SparseVoxelTensor, cfg, **build_kw) -> str:
+    def key_for(self, t: SparseVoxelTensor, cfg, *, topology: str | None = None,
+                **build_kw) -> str:
         """Cache key for scene ``t`` under ``cfg`` + build mode: the same
         geometry under a different config/spec is a different plan. The key
         is an O(V) content hash — callers on a hot path should compute it
         once and pass it back via ``key=``. The table-layout version is
-        mixed in so a layout bump invalidates every previously cached
-        plan."""
-        tag = f"v{_PLAN_VERSION}|{cfg!r}|{sorted(build_kw.items())!r}"
+        mixed in so a layout bump invalidates every previously cached plan,
+        and ``topology`` (``ExecutionContext.topology_key()``: mesh axes +
+        shard axis) is mixed in so a plan built for one mesh topology is
+        never served to another — sharded plans embed mesh-shaped halo
+        tables that would silently misroute rows on a different mesh."""
+        tag = (f"v{_PLAN_VERSION}|top={topology}|{cfg!r}|"
+               f"{sorted(build_kw.items())!r}")
         return scene_key(t, tag)
 
     def get_or_build(self, t: SparseVoxelTensor, cfg, *, device: bool = True,
-                     key: str | None = None, **build_kw) -> ScenePlan:
+                     key: str | None = None, topology: str | None = None,
+                     builder=None, **build_kw) -> ScenePlan:
         """Return the plan for scene ``t`` under ``cfg``, building at most
         once across threads (concurrent callers for the same key coalesce
         onto one build). ``key`` skips re-hashing when the caller already
-        holds ``key_for(t, cfg, **build_kw)``."""
+        holds ``key_for(t, cfg, topology=..., **build_kw)``. ``builder``
+        swaps the host plan builder (default ``build_scene_plan_host``;
+        sharded serving passes ``engine.shard``'s) — callers must route
+        distinguishing builder config through ``build_kw``/``topology`` so
+        different builders never collide on a key."""
+        if builder is None:
+            builder = build_scene_plan_host
         if key is None:
-            key = self.key_for(t, cfg, **build_kw)
+            key = self.key_for(t, cfg, topology=topology, **build_kw)
         while True:
             with self._lock:
                 entry = self._plans.get(key)
@@ -224,7 +243,7 @@ class PlanCache:
                 return self._resolve(entry, device)
             ev.wait()  # another thread is building this plan; re-check
         try:
-            host = build_scene_plan_host(t, cfg, **build_kw)
+            host = builder(t, cfg, **build_kw)
         except BaseException:
             with self._lock:
                 self._building.pop(key, None)

@@ -88,7 +88,8 @@ def apply_unet(params: dict, feats: jax.Array,
         "models.scn.apply_unet is deprecated; use repro.engine.apply_unet",
         DeprecationWarning, stacklevel=2)
     plan = meta if isinstance(meta, engine.ScenePlan) else meta_to_plan(meta)
-    # the pre-engine semantics were the reference einsum on every layer
+    # the pre-engine semantics were the reference einsum on every layer;
+    # omitting ctx= dispatches through the ambient ExecutionContext
     return engine.apply_unet(params, feats, plan, backend="reference")
 
 

@@ -108,7 +108,8 @@ class Engine:
             row[-len(prompt):] = prompt
         return row
 
-    def _dispatch_stage(self, reqs: list[Request], rows) -> jax.Array:
+    def _dispatch_stage(self, reqs: list[Request], rows, stats) -> jax.Array:
+        del stats  # the LM engine records nothing beyond the shared timings
         if self.max_new < 1:
             return jnp.zeros((self.batch, 0), jnp.int32)
         toks = np.zeros((self.batch, self.prompt_len), np.int32)

@@ -2,18 +2,33 @@
 
 The 3D face of the shared ``serving.scheduler.WaveScheduler``: the host
 packs up to ``batch`` scene requests per wave, builds (or cache-hits) each
-scene's ``ScenePlan``, stacks the plans along a leading scene axis and runs
-one jitted vmapped U-Net forward. All shapes are static — scene capacity is
-fixed, and a pinned ``PlanSpec`` freezes the SPADE dispatch decisions and
-tile counts — so every wave after the first is a jit cache hit
-(``n_compilations`` stays 1).
+scene's plan, and runs the wave through one jitted forward. All shapes are
+static — scene capacity is fixed, and a pinned ``PlanSpec`` (or, sharded, a
+pinned halo budget) freezes the plan signature — so every wave after the
+first is a jit cache hit (``n_compilations`` stays 1).
+
+The engine executes under an :class:`~repro.engine.context.ExecutionContext`
+(``ctx=``): the context owns the plan cache (topology mixed into every
+key), the backend registry the jitted forward dispatches through, and —
+for sharded serving — the device mesh. Two serving modes:
+
+* **batched** (default): plans stack along a leading scene axis and one
+  vmapped U-Net forward serves the wave.
+* **sharded** (``layout=ShardLayout(...)`` with a pinned ``halo`` budget):
+  each scene's capacity axis is split over ``ctx.mesh``'s shard axis; the
+  plan stage builds per-shard metadata + halo send tables (pure numpy, on
+  planner threads — the per-shard plan pass pipelines against device
+  execution), and dispatch enqueues one sharded forward per scene. Each
+  wave's ``WaveStats.notes`` records the per-shard plan builds and halo
+  rows, so the shard planning work is observable per wave.
 
 Stage split (the paper's offline-pass/execution overlap, served):
 
 * **plan** — ``PlanCache.get_or_build(device=False)``: the AdMAC + SOAR +
-  SPADE numpy pass, run on planner threads up to ``depth`` waves ahead;
-* **dispatch** — fetch the (memoized) device upload of each plan, stack the
-  wave, enqueue the jitted forward without blocking;
+  SPADE (+ halo split) numpy pass, run on planner threads up to ``depth``
+  waves ahead;
+* **dispatch** — fetch the (memoized) device upload of each plan and
+  enqueue the jitted forward without blocking;
 * **drain** — block on the previous wave's logits and fill the requests.
 
 ``sync=True`` (default) runs the same stages back-to-back — bitwise
@@ -33,7 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import api as engine_api
+from repro.engine.context import ExecutionContext
 from repro.engine.plan import PlanCache, PlanSpec, ScenePlan
+from repro.engine.shard import ShardLayout, build_sharded_scene_plan_host
 from repro.serving.scheduler import WaveScheduler, WaveStats
 from repro.sparse.tensor import SparseVoxelTensor
 
@@ -51,43 +68,92 @@ class SceneEngine:
     """Host-side batched scene driver (fixed shapes, plan-cached).
 
     ``spec=None`` serves every scene on the reference backend (always a
-    single jit signature); pass ``spec=build_plan_spec(rep_scenes, cfg)`` to
-    serve the SPADE-planned reference/SSpNNA mix at pinned tile shapes.
-    ``sync=False`` turns on the asynchronous wave pipeline: plan building
-    for wave *k+1* overlaps device execution of wave *k* and readback of
-    wave *k−1* (``depth`` device waves in flight, ``planner_threads`` host
-    builders).
+    single jit signature); pass ``spec=build_plan_spec(rep_scenes, cfg)``
+    to serve the SPADE-planned reference/SSpNNA mix at pinned tile shapes,
+    or ``layout=pin_halo(rep_scenes, cfg, ShardLayout(...))`` (with a
+    mesh-carrying ``ctx``) to serve mesh-sharded scenes. ``sync=False``
+    turns on the asynchronous wave pipeline: plan building for wave *k+1*
+    overlaps device execution of wave *k* and readback of wave *k−1*
+    (``depth`` device waves in flight, ``planner_threads`` host builders).
+    ``sync`` / ``depth`` / ``planner_threads`` default to the context's
+    scheduler wiring when left ``None``.
     """
 
     def __init__(self, cfg, params, batch: int,
                  spec: PlanSpec | None = None, *,
+                 ctx: ExecutionContext | None = None,
+                 layout: ShardLayout | None = None,
                  backend: str = "auto", use_kernel: bool = False,
-                 interpret: bool | None = None, plan_cache_size: int = 128,
+                 interpret: bool | None = None,
+                 plan_cache_size: int | None = None,
                  order: str = "soar", soar_chunk: int = 512,
-                 sync: bool = True, depth: int = 2,
-                 planner_threads: int = 2):
+                 sync: bool | None = None, depth: int | None = None,
+                 planner_threads: int | None = None):
+        if ctx is None:
+            ctx = ExecutionContext(
+                plan_cache=PlanCache(plan_cache_size or 128))
+        elif plan_cache_size is not None:
+            raise ValueError(
+                "plan_cache_size only applies when the engine builds its "
+                "own context; size ctx.plan_cache when passing ctx=")
         self.cfg, self.params, self.batch, self.spec = cfg, params, batch, spec
-        self._plan_kw = dict(spec=spec, plan_tiles=spec is not None,
-                             order=order, soar_chunk=soar_chunk)
-        self.cache = PlanCache(plan_cache_size)
+        self.ctx, self.layout = ctx, layout
+        self.cache = ctx.plan_cache
+        self._topology = ctx.topology_key()
+        self._plan_sig = None  # sharded mode: pinned wave plan signature
+        if layout is not None:
+            if spec is not None:
+                raise ValueError(
+                    "spec= and layout= are mutually exclusive: sharded "
+                    "serving plans its own per-shard metadata")
+            if layout.halo < 1:
+                raise ValueError(
+                    "sharded serving needs a pinned halo budget for a "
+                    "single jit signature; pin one with engine.pin_halo")
+            if ctx.mesh is not None:
+                axes = getattr(ctx.mesh, "axis_names", ())
+                if (layout.axis not in axes
+                        or int(ctx.mesh.shape[layout.axis]) != layout.n_shards):
+                    raise ValueError(
+                        f"layout needs mesh axis {layout.axis!r} of size "
+                        f"{layout.n_shards}; ctx mesh has axes "
+                        f"{dict(getattr(ctx.mesh, 'shape', {}))}")
+            self._plan_kw = dict(layout=layout)
+            self._builder = build_sharded_scene_plan_host
+        else:
+            self._plan_kw = dict(spec=spec, plan_tiles=spec is not None,
+                                 order=order, soar_chunk=soar_chunk)
+            self._builder = None  # PlanCache default (build_scene_plan_host)
         self.scheduler = WaveScheduler(
             batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
-            drain=self._drain_stage, sync=sync, depth=depth,
-            planner_threads=planner_threads)
+            drain=self._drain_stage,
+            sync=ctx.sync if sync is None else sync,
+            depth=ctx.depth if depth is None else depth,
+            planner_threads=(ctx.planner_threads if planner_threads is None
+                             else planner_threads))
 
-        def batched_apply(params, feats, plans):
-            # feats/plans arrive as length-`batch` lists; stacking inside the
-            # jit keeps dispatch a single async enqueue (no eager per-leaf
-            # stack ops racing the in-flight wave on the device queue)
-            batch_feats = jnp.stack(feats)
-            batch_plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
-            return jax.vmap(
-                lambda f, p: engine_api.apply_unet(
-                    params, f, p, backend=backend, use_kernel=use_kernel,
-                    interpret=interpret)
-            )(batch_feats, batch_plan)
+        if layout is not None:
+            def sharded_apply(params, feats, plan):
+                return engine_api.apply_unet(
+                    params, feats, plan, backend=backend, ctx=ctx,
+                    use_kernel=use_kernel, interpret=interpret)
 
-        self._apply = jax.jit(batched_apply)
+            self._apply = jax.jit(sharded_apply)
+        else:
+            def batched_apply(params, feats, plans):
+                # feats/plans arrive as length-`batch` lists; stacking
+                # inside the jit keeps dispatch a single async enqueue (no
+                # eager per-leaf stack ops racing the in-flight wave on the
+                # device queue)
+                batch_feats = jnp.stack(feats)
+                batch_plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+                return jax.vmap(
+                    lambda f, p: engine_api.apply_unet(
+                        params, f, p, backend=backend, ctx=ctx,
+                        use_kernel=use_kernel, interpret=interpret)
+                )(batch_feats, batch_plan)
+
+            self._apply = jax.jit(batched_apply)
 
     # -- introspection -------------------------------------------------------
 
@@ -120,17 +186,42 @@ class SceneEngine:
 
         The payload carries the cache key so the dispatch thread never
         re-hashes the scene on the critical path."""
-        key = self.cache.key_for(req.scene, self.cfg, **self._plan_kw)
+        key = self.cache.key_for(req.scene, self.cfg,
+                                 topology=self._topology, **self._plan_kw)
         plan = self.cache.get_or_build(req.scene, self.cfg, device=False,
-                                       key=key, **self._plan_kw)
+                                       key=key, builder=self._builder,
+                                       **self._plan_kw)
         return key, plan
 
-    def _dispatch_stage(self, reqs: list[SceneRequest], payloads):
+    def _dispatch_stage(self, reqs: list[SceneRequest], payloads, stats):
         # the plan stage built (and counted) these host plans; adopt fetches
         # the memoized device upload without rebuilding (even if LRU
         # pressure evicted the entry) and without skewing hits/misses
         plans = [self.cache.adopt(key, hp, device=True)
                  for key, hp in payloads]
+        if self.layout is not None:
+            # the pinned halo budget promises one jit signature across
+            # every wave; a diverging plan (wrong capacity, re-pinned
+            # layout) must fail loudly, not silently recompile
+            for r, p in zip(reqs, plans):
+                leaves, td = jax.tree_util.tree_flatten(p)
+                sig = (td, tuple(x.shape for x in leaves))
+                if self._plan_sig is None:
+                    self._plan_sig = sig
+                elif sig != self._plan_sig:
+                    raise RuntimeError(
+                        f"scene {r.rid}: sharded plan signature diverged "
+                        "from the pinned layout (capacity mismatch or a "
+                        "re-pinned halo budget?); re-pin with "
+                        "engine.pin_halo")
+            stats.notes["plan_shards"] = self.layout.n_shards
+            stats.notes["plan_builds"] = len(payloads)
+            stats.notes["halo_rows"] = sum(
+                hp.halo_rows() for _, hp in payloads)
+            # per-scene sharded forwards; jax async dispatch keeps the
+            # loop non-blocking, so the wave still pipelines as one unit
+            return [self._apply(self.params, r.scene.feats, p)
+                    for r, p in zip(reqs, plans)]
         t0 = jax.tree_util.tree_structure(plans[0])
         for r, p in zip(reqs, plans):
             if jax.tree_util.tree_structure(p) != t0:
@@ -145,7 +236,10 @@ class SceneEngine:
         return self._apply(self.params, feats, plans)
 
     def _drain_stage(self, reqs: list[SceneRequest], logits) -> None:
-        logits = np.asarray(logits)
+        if isinstance(logits, list):  # sharded mode: per-scene handles
+            logits = np.stack([np.asarray(h) for h in logits])
+        else:
+            logits = np.asarray(logits)
         for i, r in enumerate(reqs):
             r.logits = logits[i]
             r.pred = logits[i].argmax(-1)

@@ -14,9 +14,14 @@ that means a three-stage pipeline over request *waves* of up to ``batch``:
 ``WaveScheduler`` owns the request deque, admission, completion plumbing
 and per-wave timing; the engines plug in the three stage callbacks:
 
-    plan(request) -> payload            # host-only, thread-safe
-    dispatch(requests, payloads) -> h   # enqueue device work, no blocking
-    drain(requests, h) -> None          # block on h, fill request results
+    plan(request) -> payload               # host-only, thread-safe
+    dispatch(requests, payloads, stats) -> h  # enqueue device work, no block
+    drain(requests, h) -> None             # block on h, fill request results
+
+``stats`` is the wave's ``WaveStats``; dispatch may record engine-specific
+observations in ``stats.notes`` (e.g. the sharded scene engine records the
+per-shard plan builds and halo rows of each wave) — they ride along with
+the timing rows in ``scheduler.stats``.
 
 ``sync=True`` degenerates to the classic blocking wave loop (same stages,
 run back-to-back on the caller's thread) — numerics are identical in both
@@ -37,7 +42,7 @@ import time
 from collections import deque
 from collections.abc import Callable, Sequence
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 
 def overlap_fraction(plan_span_ms: float, plan_wait_ms: float) -> float:
@@ -63,6 +68,9 @@ class WaveStats:
     dispatch_ms: float = 0.0   # host time enqueueing the jitted call
     device_ms: float = 0.0     # dispatch call -> results drained
     drain_ms: float = 0.0      # time blocked in readback
+    #: engine-specific observations the dispatch stage records (e.g. the
+    #: sharded scene engine's per-shard plan builds / halo rows)
+    notes: dict = field(default_factory=dict)
 
     @property
     def overlap_frac(self) -> float:
@@ -182,7 +190,7 @@ class WaveScheduler:
                 st.plan_span_ms = st.plan_ms   # serial builds
                 st.plan_wait_ms = st.plan_span_ms  # nothing hidden in sync
                 t_disp = _now_ms()
-                handle = self._dispatch(reqs, payloads)
+                handle = self._dispatch(reqs, payloads, st)
                 st.dispatch_ms = _now_ms() - t_disp
                 t_drain = _now_ms()
                 self._drain(reqs, handle)
@@ -244,7 +252,7 @@ class WaveScheduler:
                         st.plan_span_ms = max(ends) - min(starts)
                     st.plan_wait_ms = _now_ms() - t_gather
                     t_disp = _now_ms()
-                    handle = self._dispatch(reqs, payloads)
+                    handle = self._dispatch(reqs, payloads, st)
                     st.dispatch_ms = _now_ms() - t_disp
                     inflight.append((reqs, st, handle, t_disp))
                     failed = []

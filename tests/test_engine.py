@@ -183,3 +183,96 @@ def test_host_meta_numpy_mirrors_match_jax_builders(setup):
     want3 = transposed_coir(coarse, t.coords, t.mask, RES, 2, 2)
     np.testing.assert_array_equal(got3.indices, np.asarray(want3.indices))
     np.testing.assert_array_equal(got3.bitmask, np.asarray(want3.bitmask))
+
+
+# ---------------------------------------------------------------------------
+# Backend registry + ExecutionContext (the PR-5 API seam)
+# ---------------------------------------------------------------------------
+
+class _DoubledBackend(engine.Backend):
+    """Toy backend: reference numerics times two (distinguishable)."""
+
+    name = "doubled"
+
+    def run(self, x, params, plan, *, ctx, **kw):
+        from repro.core.sparse_conv import reference_conv_cirf
+        return 2.0 * reference_conv_cirf(x, plan.coir, params)
+
+
+def test_new_backend_registers_without_touching_the_dispatcher(setup):
+    """The acceptance seam: a backend defined here — no engine.api edits —
+    is routable by explicit name AND via a plan's Dispatch decision."""
+    cfg, params, t, plan = setup
+    ctx = engine.ExecutionContext()  # scoped registry view
+    ctx.registry.register("doubled", _DoubledBackend())
+    lvl0 = plan.levels[0].sub
+    ref = engine.sparse_conv(t.feats, params["stem"], lvl0,
+                             backend="reference")
+    got = engine.sparse_conv(t.feats, params["stem"], lvl0,
+                             backend="doubled", ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(got), 2.0 * np.asarray(ref))
+    # SPADE/Dispatch emit a *name*; the registry resolves it under "auto"
+    named = engine.ConvPlan(lvl0.coir, None,
+                            engine.Dispatch(backend="doubled"))
+    got_auto = engine.sparse_conv(t.feats, params["stem"], named,
+                                  backend="auto", ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(got_auto), 2.0 * np.asarray(ref))
+    assert engine.resolve_backend(named, "auto", ctx=ctx) == "doubled"
+    # the scoped registration never leaked into the process default
+    assert "doubled" not in engine.default_registry()
+    with pytest.raises(ValueError):
+        engine.sparse_conv(t.feats, params["stem"], lvl0, backend="doubled")
+    # global registration path (+ cleanup) works too
+    engine.register_backend("doubled", _DoubledBackend())
+    try:
+        assert "doubled" in engine.available_backends()
+        assert "doubled" in engine.BACKENDS  # legacy alias stays live
+    finally:
+        engine.default_registry().unregister("doubled")
+    assert "doubled" not in engine.available_backends()
+
+
+def test_backend_fallback_chain_and_errors(setup):
+    cfg, params, t, plan = setup
+    bare = engine.reference_plan(plan.levels[0].sub.coir)
+    # sspnna without tile metadata degrades along its declared fallback
+    assert engine.resolve_backend(bare, "sspnna") == "reference"
+    reg = engine.default_registry().view()
+    with pytest.raises(ValueError, match="not one of"):
+        reg.resolve(bare, "bogus")
+    with pytest.raises(ValueError):
+        reg.register("auto", _DoubledBackend())  # reserved name
+    with pytest.raises(ValueError):
+        reg.register("reference", _DoubledBackend())  # no silent shadowing
+
+
+def test_use_context_scopes_ambient_resolution(setup):
+    cfg, params, t, plan = setup
+    ctx = engine.ExecutionContext()
+    ctx.registry.register("doubled", _DoubledBackend())
+    lvl0 = plan.levels[0].sub
+    ref = engine.sparse_conv(t.feats, params["stem"], lvl0,
+                             backend="reference")
+    with engine.use_context(ctx):
+        assert engine.current_context() is ctx
+        got = engine.sparse_conv(t.feats, params["stem"], lvl0,
+                                 backend="doubled")  # no ctx= needed
+    np.testing.assert_array_equal(np.asarray(got), 2.0 * np.asarray(ref))
+    assert engine.current_context() is engine.default_context()
+    with pytest.raises(ValueError):
+        engine.sparse_conv(t.feats, params["stem"], lvl0, backend="doubled")
+
+
+def test_scene_engine_accepts_shared_context(setup):
+    """Two engines on one context share its plan cache."""
+    cfg, params, t, plan = setup
+    ctx = engine.ExecutionContext()
+    e1 = SceneEngine(cfg, params, batch=2, ctx=ctx)
+    e2 = SceneEngine(cfg, params, batch=2, ctx=ctx)
+    assert e1.cache is ctx.plan_cache and e2.cache is ctx.plan_cache
+    e1.submit([SceneRequest(0, t)])
+    e1.run()
+    e2.submit([SceneRequest(1, t)])
+    e2.run()
+    assert ctx.plan_cache.hits >= 1  # e2 hit e1's plan
+    e1.close(), e2.close()

@@ -7,14 +7,17 @@ import pytest
 from conftest import make_shell_scene
 from repro.core import soar
 from repro.core.hashgrid import build_neighbor_table, kernel_offsets
-from repro.core.sparse_conv import init_sparse_conv, sparse_conv_cirf, submanifold_coir
-from repro.core.tiles import build_tile_plan
+from repro import engine
+from repro.core.sparse_conv import (
+    init_sparse_conv,
+    reference_conv_cirf,
+    submanifold_coir,
+)
 from repro.kernels.flash.flash import flash_attention
 from repro.kernels.flash.ops import flash_attention_bshd
 from repro.kernels.flash.ref import attention_ref
 from repro.kernels.moe_gemm.moe_gemm import grouped_gemm
 from repro.kernels.moe_gemm.ref import grouped_gemm_ref
-from repro.kernels.sspnna.ops import sspnna_conv_from_plan
 from repro.kernels.sspnna.ref import sspnna_tile_ref
 from repro.kernels.sspnna.sspnna import sspnna_tiles
 from repro.sparse.tensor import from_dense
@@ -50,10 +53,10 @@ def test_sspnna_full_conv_path(rng):
     nbr = np.asarray(build_neighbor_table(
         t.coords, t.mask, jnp.asarray(kernel_offsets(3)), 18))
     order = soar.soar_order(nbr, np.asarray(t.mask), 64).order
-    plan = build_tile_plan(np.asarray(coir.indices), order, 64, 192)
-    out = sspnna_conv_from_plan(t.feats, params.weight, plan,
-                                n_out=t.capacity, use_kernel=True)
-    ref = sparse_conv_cirf(t.feats, coir, params) - params.bias
+    cp = engine.conv_plan_for_layer(coir, order, 64, 192)
+    out = engine.sparse_conv(t.feats, params, cp, backend="sspnna",
+                             use_kernel=True)
+    ref = reference_conv_cirf(t.feats, coir, params)
     mask = np.asarray(t.mask)
     np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(ref)[mask],
                                rtol=1e-4, atol=1e-4)

@@ -3,11 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.data.scenes import N_CLASSES, make_scene
 from repro.models.scn import (
     UNetConfig,
-    apply_unet,
-    build_unet_metadata,
     init_unet,
     miou,
     segmentation_loss,
@@ -21,23 +20,25 @@ def _setup(res=24, cap=3000):
                           jnp.asarray(mask))
     cfg = UNetConfig(widths=(8, 16, 24), reps=1, resolution=res,
                      capacity=cap, n_classes=N_CLASSES)
-    meta = build_unet_metadata(t, cfg)
+    plan = engine.build_scene_plan(t, cfg, plan_tiles=False)
     params = init_unet(jax.random.PRNGKey(0), cfg)
-    return cfg, t, meta, params, jnp.asarray(labels)
+    return cfg, t, plan, params, jnp.asarray(labels)
 
 
 def test_unet_forward_shapes_no_nan():
-    cfg, t, meta, params, labels = _setup()
-    logits = jax.jit(lambda p, x: apply_unet(p, x, meta))(params, t.feats)
+    cfg, t, plan, params, labels = _setup()
+    logits = jax.jit(
+        lambda p, x: engine.apply_unet(p, x, plan))(params, t.feats)
     assert logits.shape == (t.capacity, cfg.n_classes)
     assert not bool(jnp.any(jnp.isnan(logits)))
 
 
 def test_unet_learns_scene():
-    cfg, t, meta, params, labels = _setup()
+    cfg, t, plan, params, labels = _setup()
 
     def loss_fn(p):
-        l, acc = segmentation_loss(apply_unet(p, t.feats, meta), labels, t.mask)
+        l, acc = segmentation_loss(engine.apply_unet(p, t.feats, plan),
+                                   labels, t.mask)
         return l, acc
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
@@ -47,7 +48,8 @@ def test_unet_learns_scene():
         params = jax.tree.map(lambda p, gr: p - 0.3 * gr, params, g)
         losses.append(float(l))
     assert losses[-1] < losses[0] - 0.5
-    pred = np.asarray(jnp.argmax(apply_unet(params, t.feats, meta), -1))
+    pred = np.asarray(
+        jnp.argmax(engine.apply_unet(params, t.feats, plan), -1))
     m = miou(pred, np.asarray(labels), np.asarray(t.mask), cfg.n_classes)
     assert m > 0.15
 

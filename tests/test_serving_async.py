@@ -183,7 +183,7 @@ def test_poisoned_wave_requeues_without_losing_requests(setup, sync):
 
 
 def test_scheduler_validates_knobs():
-    stages = dict(plan=lambda r: r, dispatch=lambda rs, ps: ps,
+    stages = dict(plan=lambda r: r, dispatch=lambda rs, ps, st: ps,
                   drain=lambda rs, h: None)
     with pytest.raises(ValueError):
         WaveScheduler(batch=0, **stages)

@@ -1,0 +1,264 @@
+"""Mesh-sharded scenes: halo exchange, bitwise-vs-serial, sharded serving.
+
+The acceptance bar: ``backend="sharded"`` ``apply_unet`` on a >=2-device
+mesh is **bitwise identical** to the single-device reference path (the
+same deterministic per-shard program under ``vmap(axis_name=...)``), with
+per-shard plan builds observable in ``WaveScheduler`` stats — plus
+fp-tolerance agreement with the unsharded ``"reference"`` einsum backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic local shim
+    from _hypothesis_mini import given, settings, strategies as st
+
+from repro import engine
+from repro.data.scenes import N_CLASSES, make_scene
+from repro.dist.collectives import halo_exchange
+from repro.dist.compat import make_mesh
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.sparse.tensor import SparseVoxelTensor
+
+RES, CAP = 24, 2048
+
+
+def _scene(seed, res=RES, cap=CAP):
+    coords, feats, labels, mask = make_scene(seed, resolution=res, capacity=cap)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+def _random_scene(rng, cap, res, n_active, channels=4):
+    """Uniform random active voxels — receptive fields cross shard
+    boundaries freely because the contiguous capacity split is unrelated
+    to spatial position."""
+    coords = np.full((cap, 3), -1, np.int32)
+    feats = np.zeros((cap, channels), np.float32)
+    mask = np.zeros((cap,), bool)
+    if n_active:
+        pts = np.unique(rng.integers(0, res, size=(n_active, 3)).astype(np.int32),
+                        axis=0)
+        coords[:len(pts)] = pts
+        feats[:len(pts)] = rng.normal(size=(len(pts), channels))
+        mask[:len(pts)] = True
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+def _mesh(n):
+    return make_mesh((n,), ("shard",), devices=jax.devices()[:n])
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    t = _scene(0)
+    ref = engine.apply_unet(params, t.feats,
+                            engine.build_scene_plan(t, cfg, plan_tiles=False),
+                            backend="reference")
+    return cfg, params, t, np.asarray(ref)
+
+
+def test_halo_exchange_matches_numpy_oracle(rng):
+    S, Vs, H, C = 4, 32, 6, 3
+    feats = jnp.asarray(rng.normal(size=(S, Vs, C)).astype(np.float32))
+    send = rng.integers(-1, Vs, size=(S, S, H)).astype(np.int32)
+    got = np.asarray(halo_exchange(_mesh(S), feats, jnp.asarray(send)))
+    want = np.zeros((S, S, H, C), np.float32)
+    for d in range(S):
+        for s in range(S):
+            for j in range(H):
+                if send[d, s, j] >= 0:
+                    want[s, d, j] = np.asarray(feats)[d, send[d, s, j]]
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_unet_bitwise_vs_single_device(setup, n_shards):
+    """Mesh execution == single-device reference path, bitwise; and the
+    deterministic sharded numerics agree with the unsharded einsum
+    reference to fp tolerance."""
+    cfg, params, t, ref = setup
+    splan = engine.build_sharded_scene_plan(
+        t, cfg, layout=engine.ShardLayout(n_shards=n_shards))
+    assert splan.halo_rows() > 0  # receptive fields really cross shards
+    serial = jax.jit(
+        lambda p, f, pl: engine.apply_unet(p, f, pl))(params, t.feats, splan)
+    ctx = engine.ExecutionContext(mesh=_mesh(n_shards))
+    meshed = jax.jit(
+        lambda p, f, pl: engine.apply_unet(p, f, pl, ctx=ctx))(
+            params, t.feats, splan)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(meshed))
+    m = np.asarray(t.mask)
+    np.testing.assert_allclose(np.asarray(meshed)[m], ref[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_backend_is_scene_level(setup):
+    cfg, params, t, ref = setup
+    splan = engine.build_sharded_scene_plan(
+        t, cfg, layout=engine.ShardLayout(n_shards=2))
+    # a sharded plan cannot be forced onto a per-conv backend
+    with pytest.raises(ValueError):
+        engine.apply_unet(params, t.feats, splan, backend="reference")
+    impl = engine.default_registry().get(engine.SHARDED)
+    with pytest.raises(ValueError):
+        impl.run(t.feats, params["stem"], splan, ctx=None)
+
+
+# jitted once per shard count: every property-test example reuses the same
+# signature (fixed capacity + pinned halo budget), so the sweep compiles
+# 2x, not 2x-per-example
+_PROP_FNS: dict = {}
+
+
+def _prop_fns(n_shards):
+    if n_shards not in _PROP_FNS:
+        ctx = engine.ExecutionContext(mesh=_mesh(n_shards))
+        _PROP_FNS[n_shards] = (
+            jax.jit(lambda p, f, pl: engine.apply_unet(p, f, pl)),
+            jax.jit(lambda p, f, pl: engine.apply_unet(p, f, pl, ctx=ctx)),
+        )
+    return _PROP_FNS[n_shards]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 320))
+def test_sharded_random_scenes_property(seed, n_active):
+    """Random scenes — including empty shards and (at n_active=0) fully
+    empty scenes — stay bitwise mesh-vs-serial over 2 and 4 virtual
+    devices and allclose to the unsharded reference."""
+    cap, res = 512, 16
+    cfg = UNetConfig(widths=(4, 8), reps=1, resolution=res, capacity=cap,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(7), cfg)
+    t = _random_scene(np.random.default_rng(seed), cap, res, n_active)
+    ref = np.asarray(engine.apply_unet(
+        params, t.feats, engine.build_scene_plan(t, cfg, plan_tiles=False),
+        backend="reference"))
+    for n_shards in (2, 4):
+        # fixed halo budget -> one jit signature across examples
+        layout = engine.ShardLayout(n_shards=n_shards, halo=cap // n_shards)
+        splan = engine.build_sharded_scene_plan(t, cfg, layout=layout)
+        serial_fn, mesh_fn = _prop_fns(n_shards)
+        serial = serial_fn(params, t.feats, splan)
+        meshed = mesh_fn(params, t.feats, splan)
+        np.testing.assert_array_equal(np.asarray(serial), np.asarray(meshed))
+        m = np.asarray(t.mask)
+        np.testing.assert_allclose(np.asarray(meshed)[m], ref[m],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_halo_budget_overflow_raises(setup):
+    cfg, params, t, ref = setup
+    with pytest.raises(ValueError, match="halo budget"):
+        engine.build_sharded_scene_plan_host(
+            t, cfg, layout=engine.ShardLayout(n_shards=4, halo=2))
+
+
+def test_pin_halo_freezes_signature(setup):
+    cfg, params, t, ref = setup
+    layout = engine.pin_halo([_scene(0), _scene(1)], cfg,
+                             engine.ShardLayout(n_shards=2))
+    assert layout.halo > 0
+    p0 = engine.build_sharded_scene_plan_host(t, cfg, layout=layout)
+    p1 = engine.build_sharded_scene_plan_host(_scene(1), cfg, layout=layout)
+    assert (jax.tree_util.tree_structure(p0)
+            == jax.tree_util.tree_structure(p1))
+    shapes = [tuple(x.shape) for x in jax.tree_util.tree_leaves(p0)]
+    assert shapes == [tuple(x.shape) for x in jax.tree_util.tree_leaves(p1)]
+
+
+def test_plan_cache_keys_mix_in_topology(setup):
+    """Regression (PR-5 satellite): a plan built for one mesh topology or
+    shard layout must never be served to another."""
+    cfg, params, t, ref = setup
+    cache = engine.PlanCache(capacity=8)
+    ctx2 = engine.ExecutionContext(mesh=_mesh(2))
+    ctx4 = engine.ExecutionContext(mesh=_mesh(4))
+    k_host = cache.key_for(t, cfg, topology=None)
+    k2 = cache.key_for(t, cfg, topology=ctx2.topology_key())
+    k4 = cache.key_for(t, cfg, topology=ctx4.topology_key())
+    assert len({k_host, k2, k4}) == 3
+    # shard layout differences split keys too (it rides in build_kw)
+    ka = cache.key_for(t, cfg, topology=ctx4.topology_key(),
+                       layout=engine.ShardLayout(4, halo=64))
+    kb = cache.key_for(t, cfg, topology=ctx4.topology_key(),
+                       layout=engine.ShardLayout(4, halo=128))
+    assert ka != kb
+    # and a different shard axis on the same mesh is a different topology
+    ctx4b = engine.ExecutionContext(mesh=_mesh(4), shard_axis="other")
+    assert ctx4.topology_key() != ctx4b.topology_key()
+
+
+def test_scene_engine_rejects_mismatched_mesh(setup):
+    """A mesh lacking the layout's shard axis (or with the wrong size)
+    must fail at construction, not inside the first wave's jit trace."""
+    cfg, params, t, ref = setup
+    layout = engine.ShardLayout(n_shards=4, halo=64)
+    bad_axis = engine.ExecutionContext(
+        mesh=make_mesh((4,), ("pod",), devices=jax.devices()[:4]))
+    with pytest.raises(ValueError, match="mesh axis"):
+        SceneEngine(cfg, params, batch=2, ctx=bad_axis, layout=layout)
+    bad_size = engine.ExecutionContext(mesh=_mesh(2))
+    with pytest.raises(ValueError, match="mesh axis"):
+        SceneEngine(cfg, params, batch=2, ctx=bad_size, layout=layout)
+
+
+def test_scene_engine_sharded_guards_signature_and_cache_args(setup):
+    """A diverged plan signature (e.g. wrong scene capacity) raises and
+    requeues instead of silently recompiling; plan_cache_size with an
+    explicit ctx is rejected instead of silently ignored."""
+    cfg, params, t, ref = setup
+    layout = engine.ShardLayout(n_shards=4, halo=CAP // 4)
+    ctx = engine.ExecutionContext(mesh=_mesh(4))
+    eng = SceneEngine(cfg, params, batch=2, ctx=ctx, layout=layout)
+    eng.submit([SceneRequest(0, t)])
+    eng.run()
+    small = _scene(5, res=RES, cap=CAP // 2)  # divides 4 shards, wrong V
+    eng.submit([SceneRequest(1, small)])
+    with pytest.raises(RuntimeError, match="signature diverged"):
+        eng.run()
+    assert eng.n_compilations == 1  # no silent second signature
+    assert [r.rid for r in eng.queue] == [1]  # requeued, not dropped
+    eng.close()
+    with pytest.raises(ValueError, match="plan_cache_size"):
+        SceneEngine(cfg, params, batch=2, ctx=ctx, plan_cache_size=4)
+
+
+def test_scene_engine_serves_sharded_waves(setup):
+    cfg, params, t, ref = setup
+    n_shards = 4
+    layout = engine.pin_halo([_scene(0), _scene(1)], cfg,
+                             engine.ShardLayout(n_shards=n_shards))
+    ctx = engine.ExecutionContext(mesh=_mesh(n_shards))
+    eng = SceneEngine(cfg, params, batch=2, ctx=ctx, layout=layout)
+    scenes = [_scene(200 + i) for i in range(5)]
+    eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    eng.run()
+    assert len(eng.completed) == 5 and eng.n_compilations == 1
+    # per-shard plan builds are observable in the scheduler stats
+    for st_ in eng.wave_stats:
+        assert st_.notes["plan_shards"] == n_shards
+        assert st_.notes["plan_builds"] == len(st_.rids)
+        assert st_.notes["halo_rows"] > 0
+    # wave results == direct sharded apply off the same plan
+    r0 = eng.completed[0]
+    plan0 = eng.cache.get_or_build(
+        r0.scene, cfg, topology=ctx.topology_key(),
+        builder=engine.build_sharded_scene_plan_host, layout=layout)
+    direct = jax.jit(
+        lambda p, f, pl: engine.apply_unet(p, f, pl, ctx=ctx))(
+            params, r0.scene.feats, plan0)
+    np.testing.assert_array_equal(r0.logits, np.asarray(direct))
+    # resubmitting a known scene hits the plan cache
+    eng.submit([SceneRequest(99, scenes[0])])
+    eng.run()
+    assert eng.cache.hits >= 1 and eng.n_compilations == 1
+    eng.close()

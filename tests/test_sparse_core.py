@@ -80,7 +80,7 @@ def test_corf_equals_cirf(scene):
     offs = jnp.asarray(kernel_offsets(3))
     cirf = build_cirf(t.coords, t.mask, t.coords, t.mask, offs, 20)
     corf = build_corf(t.coords, t.mask, t.coords, t.mask, offs, 20)
-    out_cirf = sc.sparse_conv_cirf(t.feats, cirf, params)
+    out_cirf = sc.reference_conv_cirf(t.feats, cirf, params)
     out_corf = sc.sparse_conv_corf(t.feats, corf, params, t.capacity)
     np.testing.assert_allclose(np.asarray(out_corf), np.asarray(out_cirf),
                                rtol=1e-4, atol=1e-4)
