@@ -65,11 +65,11 @@ def _serve(eng, scenes, base_rid, group=None):
     t0 = time.perf_counter()
     if group is None:
         eng.submit(reqs)
-        eng.run()
+        eng.serve()
     else:
         for i in range(0, len(reqs), group):
             eng.submit(reqs[i:i + group])
-            eng.run()
+            eng.serve()
     wall = time.perf_counter() - t0
     return wall, {r.rid: r.logits for r in reqs}, eng.wave_stats[n0:]
 

@@ -89,9 +89,10 @@ def main():
     t_serve = time.time()
     reqs = [SceneRequest(rid, load_scene(1000 + rid, args.res, args.cap))
             for rid in range(args.requests)]
-    eng.submit(reqs)
-    eng.run()
-    for r in reqs:
+    handles = eng.submit(reqs)
+    eng.serve()
+    for h in handles:
+        r = h.result()
         n = int(np.asarray(r.scene.mask).sum())
         hist = np.bincount(r.pred[np.asarray(r.scene.mask)],
                            minlength=N_CLASSES)

@@ -39,8 +39,11 @@ from repro.engine.plan import (
     PlanCache,
     PlanSpec,
     ScenePlan,
+    SignatureFamily,
     TileArrays,
     build_plan_spec,
+    build_signature_family,
+    choose_buckets,
     build_scene_plan,
     build_scene_plan_host,
     conv_plan_for_layer,
@@ -86,6 +89,7 @@ __all__ = [
     "ScenePlan",
     "ShardLayout",
     "ShardedScenePlan",
+    "SignatureFamily",
     "TileArrays",
     "apply_unet",
     "apply_unet_sharded",
@@ -95,6 +99,8 @@ __all__ = [
     "build_scene_plan_host",
     "build_sharded_scene_plan",
     "build_sharded_scene_plan_host",
+    "build_signature_family",
+    "choose_buckets",
     "conv_block",
     "conv_plan_for_layer",
     "current_context",

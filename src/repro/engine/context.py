@@ -49,6 +49,10 @@ class ExecutionContext:
     sync: bool = True
     depth: int = 2
     planner_threads: int = 2
+    #: default ``serving.AdmissionPolicy`` for engines built from this
+    #: context (typed loosely so the engine layer doesn't import serving);
+    #: None = FIFO admission
+    admission: object | None = None
 
     @property
     def n_shards(self) -> int:

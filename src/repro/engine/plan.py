@@ -147,6 +147,118 @@ class PlanSpec:
     levels: tuple[Dispatch, ...]
 
 
+@dataclass(frozen=True)
+class SignatureFamily:
+    """A small family of pinned jit signatures: voxel-capacity buckets.
+
+    Single-signature serving pads every scene to one capacity — great for
+    compilation count, wasteful under heavy mixed-size traffic (a 300-voxel
+    scan pays a 4096-voxel wave). A ``SignatureFamily`` is the middle
+    ground: a handful of capacity tiers chosen from *observed* request
+    sizes (the TorchSparse measured-over-modeled philosophy), each tier its
+    own pinned ``PlanSpec``/jit signature. The serving engine compiles each
+    bucket's signature on first use, so total compilations are bounded by
+    ``n_buckets`` — and warm single-size traffic still compiles exactly 1.
+
+    ``capacities`` must be ascending; ``specs`` pairs each capacity with a
+    pinned :class:`PlanSpec` (or ``None`` for the always-single-signature
+    reference plan at that capacity).
+    """
+
+    capacities: tuple[int, ...]
+    specs: tuple[PlanSpec | None, ...] = ()
+
+    def __post_init__(self):
+        if not self.capacities:
+            raise ValueError("SignatureFamily needs at least one capacity")
+        if list(self.capacities) != sorted(set(self.capacities)):
+            raise ValueError(
+                f"capacities must be ascending+unique, got {self.capacities}")
+        if not self.specs:
+            object.__setattr__(
+                self, "specs", (None,) * len(self.capacities))
+        if len(self.specs) != len(self.capacities):
+            raise ValueError(
+                f"{len(self.specs)} specs for {len(self.capacities)} buckets")
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.capacities)
+
+    @property
+    def max_capacity(self) -> int:
+        return self.capacities[-1]
+
+    def bucket_for(self, n_voxels: int) -> int | None:
+        """Smallest bucket capacity fitting ``n_voxels`` active voxels;
+        None when the scene exceeds every bucket (callers shed it)."""
+        for cap in self.capacities:
+            if n_voxels <= cap:
+                return cap
+        return None
+
+    def spec_for(self, capacity: int) -> PlanSpec | None:
+        return self.specs[self.capacities.index(capacity)]
+
+
+def choose_buckets(sizes, max_buckets: int = 4, *,
+                   quantum: int = 64) -> tuple[int, ...]:
+    """Capacity tiers from observed request sizes (active-voxel counts).
+
+    Quantile cuts over the observed distribution, rounded up to ``quantum``
+    multiples and deduplicated — so dense regions of the size distribution
+    get finer tiers and the top tier always covers the largest observed
+    scene. Returns ascending capacities, at most ``max_buckets`` of them.
+    """
+    sizes = [int(s) for s in sizes]
+    if not sizes:
+        raise ValueError("choose_buckets needs at least one observed size")
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    arr = np.sort(np.asarray(sizes))
+    qs = np.linspace(0.0, 1.0, max_buckets + 1)[1:]
+    caps = sorted({
+        int(np.ceil(float(np.quantile(arr, q)) / quantum)) * quantum
+        for q in qs})
+    return tuple(caps)
+
+
+def build_signature_family(
+    scenes: list[SparseVoxelTensor],
+    cfg,
+    *,
+    max_buckets: int = 4,
+    quantum: int = 64,
+    pin_specs: bool = True,
+    **spec_kw,
+) -> SignatureFamily:
+    """Freeze a bucket family from representative scenes.
+
+    Buckets come from the scenes' active-voxel counts (``choose_buckets``);
+    with ``pin_specs=True`` each bucket gets its own offline-SPADE
+    ``PlanSpec`` built from the representative scenes that fit it,
+    compacted to the bucket capacity (``spec_kw`` forwards to
+    ``build_plan_spec``). Buckets no representative scene fits keep
+    ``spec=None`` (reference plans — still one signature per bucket).
+    """
+    from dataclasses import replace
+
+    from repro.sparse.tensor import compact_to_capacity
+
+    sizes = [int(np.asarray(t.mask).sum()) for t in scenes]
+    caps = choose_buckets(sizes, max_buckets, quantum=quantum)
+    specs: list[PlanSpec | None] = []
+    for cap in caps:
+        reps = [compact_to_capacity(t, cap)[0]
+                for t, n in zip(scenes, sizes) if n <= cap]
+        if pin_specs and reps:
+            specs.append(build_plan_spec(reps, replace(cfg, capacity=cap),
+                                         **spec_kw))
+        else:
+            specs.append(None)
+    return SignatureFamily(caps, tuple(specs))
+
+
 # ---------------------------------------------------------------------------
 # Scene keys + plan cache
 # ---------------------------------------------------------------------------

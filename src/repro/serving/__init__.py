@@ -1,11 +1,39 @@
 """Serving stack: the shared wave scheduler + the LM and 3D scene engines.
 
-``serving.scheduler.WaveScheduler`` owns queueing, wave admission, the
-async plan/dispatch/drain pipeline and per-wave timing; ``serving.engine``
+``serving.api`` is the one driver surface both engines share:
+``ServeRequest`` (id/tenant/priority/deadline SLO envelope),
+``ServingBase.submit() -> RequestHandle`` and ``serve()``, with
+``AdmissionPolicy`` controlling priority/deadline ordering, weighted
+tenant fairness and backpressure shedding.  ``serving.scheduler``'s
+``WaveScheduler`` owns queueing, wave admission, the async
+plan/dispatch/drain pipeline and per-wave timing; ``serving.engine``
 (LM prefill+decode) and ``serving.scene_engine`` (batched sparse-conv
 U-Net) plug their stage callbacks into it. The engine submodules are
 imported lazily by callers to keep ``import repro.serving`` light.
 """
+from repro.serving.api import (
+    COMPLETED,
+    QUEUED,
+    RUNNING,
+    SHED,
+    AdmissionPolicy,
+    RequestHandle,
+    RequestShedError,
+    ServeRequest,
+    ServingBase,
+)
 from repro.serving.scheduler import WaveScheduler, WaveStats
 
-__all__ = ["WaveScheduler", "WaveStats"]
+__all__ = [
+    "COMPLETED",
+    "QUEUED",
+    "RUNNING",
+    "SHED",
+    "AdmissionPolicy",
+    "RequestHandle",
+    "RequestShedError",
+    "ServeRequest",
+    "ServingBase",
+    "WaveScheduler",
+    "WaveStats",
+]

@@ -1,0 +1,229 @@
+"""One serving surface for both engines: requests, handles, engine base.
+
+Pre-redesign, ``serving.scene_engine.SceneRequest`` and
+``serving.engine.Request`` were parallel dataclasses with duplicated
+``submit/run/queue/completed/wave_stats/timings/close`` surfaces on their
+engines, and no way to express priority, deadline or tenant. This module
+is the single surface both engines now share:
+
+* :class:`ServeRequest` — the request base every payload subclass extends
+  (``SceneRequest`` adds a scene, the LM ``Request`` a prompt). Carries
+  the SLO fields admission schedules on: ``tenant``, ``priority``,
+  ``deadline_ms``, plus the lifecycle ``status`` ∈ {``queued``,
+  ``running``, ``completed``, ``shed``} and timestamps the scheduler
+  stamps (``submit_ts`` at submit, ``done_ts`` at drain/shed).
+* :class:`RequestHandle` — what ``submit()`` returns: a future-like view
+  (``.done()``, ``.result(timeout=)``, ``.status``) instead of callers
+  polling ``engine.completed``. ``result()`` drives the engine on the
+  calling thread when nothing else is, or waits for the active run; a
+  shed request raises :class:`RequestShedError` (shedding is surfaced,
+  never silent).
+* :class:`ServingBase` — the engine mixin owning the driver API: typed
+  ``submit() -> RequestHandle``, ``serve()`` (pump the queue), stats
+  plumbing, and the deprecated list-returning ``run()`` / ``.completed``
+  shims the pre-handle call sites keep working through.
+
+Migration (the PR 2/5 playbook — old entry points warn, tests error on
+uncaptured deprecations):
+
+    completed = eng.run()          ->  handles = eng.submit(reqs)
+    for r in eng.completed: ...        eng.serve()
+                                       for h in handles: r = h.result()
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+from dataclasses import dataclass, field
+
+from repro.serving.scheduler import (
+    COMPLETED,
+    QUEUED,
+    RUNNING,
+    SHED,
+    AdmissionPolicy,
+    WaveScheduler,
+    WaveStats,
+)
+
+__all__ = [
+    "COMPLETED", "QUEUED", "RUNNING", "SHED",
+    "AdmissionPolicy", "RequestHandle", "RequestShedError", "ServeRequest",
+    "ServingBase", "WaveScheduler", "WaveStats",
+]
+
+
+@dataclass
+class ServeRequest:
+    """Base serving request: identity + SLO fields + lifecycle state.
+
+    Engines subclass this with their payload (scene, prompt, ...). The
+    SLO fields are keyword-only so payload subclasses keep their natural
+    positional signatures (``SceneRequest(rid, scene)``).
+
+    ``priority`` is strict (higher = more urgent); ``deadline_ms`` is
+    relative to ``submit_ts``; ``tenant`` feeds weighted fairness. All
+    three are only acted on when the scheduler runs an
+    :class:`~repro.serving.scheduler.AdmissionPolicy`.
+    """
+
+    rid: int
+    tenant: str = field(default="default", kw_only=True)
+    priority: int = field(default=0, kw_only=True)
+    deadline_ms: float | None = field(default=None, kw_only=True)
+    status: str = field(default=QUEUED, kw_only=True)
+    shed_reason: str | None = field(default=None, kw_only=True)
+    submit_ts: float | None = field(default=None, kw_only=True)
+    done_ts: float | None = field(default=None, kw_only=True)
+    seq: int = field(default=-1, kw_only=True)
+    _event: threading.Event | None = field(
+        default=None, kw_only=True, repr=False, compare=False)
+
+    @property
+    def latency_ms(self) -> float | None:
+        """End-to-end submit -> drain latency, once completed/shed."""
+        if self.submit_ts is None or self.done_ts is None:
+            return None
+        return self.done_ts - self.submit_ts
+
+
+class RequestShedError(RuntimeError):
+    """Raised by ``RequestHandle.result()`` for a shed request; carries
+    the request (``.request``) with its ``shed_reason``."""
+
+    def __init__(self, request: ServeRequest):
+        self.request = request
+        super().__init__(
+            f"request {request.rid} was shed "
+            f"({request.shed_reason or 'unknown'})")
+
+
+class RequestHandle:
+    """Future-like view of one submitted request."""
+
+    __slots__ = ("request", "_scheduler")
+
+    def __init__(self, request: ServeRequest, scheduler: WaveScheduler):
+        self.request = request
+        self._scheduler = scheduler
+
+    @property
+    def status(self) -> str:
+        return self.request.status
+
+    def done(self) -> bool:
+        """True once the request completed or was shed."""
+        return self.request.status in (COMPLETED, SHED)
+
+    def result(self, timeout: float | None = None) -> ServeRequest:
+        """The fulfilled request (results filled in by the engine's drain
+        stage). Drives the scheduler on the calling thread if no run is
+        active; otherwise waits up to ``timeout`` seconds for the active
+        run to complete it. Raises :class:`RequestShedError` if the
+        request was shed, ``TimeoutError`` on timeout."""
+        r = self.request
+        if not self.done():
+            if self._scheduler.running:
+                ev = r._event
+                if ev is None or not ev.wait(timeout):
+                    raise TimeoutError(
+                        f"request {r.rid} still {r.status} after "
+                        f"{timeout}s")
+            else:
+                self._scheduler.run()
+        if r.status == SHED:
+            raise RequestShedError(r)
+        if r.status != COMPLETED:
+            raise TimeoutError(f"request {r.rid} still {r.status}")
+        return r
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(rid={self.request.rid}, "
+                f"status={self.request.status!r})")
+
+
+class ServingBase:
+    """Driver surface shared by ``SceneEngine`` and the LM ``Engine``.
+
+    Subclasses build ``self.scheduler`` (a :class:`WaveScheduler` wired
+    with their plan/dispatch/drain stages) in ``__init__`` and may
+    override :meth:`_prepare` to classify a request before admission
+    (e.g. the scene engine's capacity-bucket assignment; returning a
+    string sheds the request with that reason)."""
+
+    scheduler: WaveScheduler
+
+    # -- submission ----------------------------------------------------------
+
+    def _prepare(self, req: ServeRequest) -> str | None:
+        """Pre-admission hook; return a shed reason to reject ``req``."""
+        return None
+
+    def submit(self, reqs):
+        """Submit one request (or a sequence) for serving; returns a
+        :class:`RequestHandle` per request (a single handle for a single
+        request). Requests the policy sheds at submit time (backpressure,
+        no compatible bucket) come back with ``status="shed"``."""
+        single = isinstance(reqs, ServeRequest)
+        rlist = [reqs] if single else list(reqs)
+        handles = []
+        for r in rlist:
+            self.scheduler.enqueue(r, shed=self._prepare(r))
+            handles.append(RequestHandle(r, self.scheduler))
+        return handles[0] if single else handles
+
+    # -- driving -------------------------------------------------------------
+
+    def serve(self, sync: bool | None = None,
+              max_waves: int | None = None) -> None:
+        """Pump the queue (to empty, or ``max_waves`` waves) on the
+        calling thread; results land on the submitted requests/handles.
+        ``sync=None`` keeps the constructor mode; a stage failure
+        re-queues the affected waves and re-raises."""
+        self.scheduler.run(sync=sync, max_waves=max_waves)
+
+    def run(self, sync: bool | None = None) -> list:
+        """Deprecated list-returning driver; use ``submit()`` +
+        ``serve()`` and read results off the handles."""
+        warnings.warn(
+            "list-returning run() is deprecated in repro.serving; use "
+            "submit() -> RequestHandle + serve(), and read results via "
+            "handle.result()", DeprecationWarning, stacklevel=2)
+        self.scheduler.run(sync=sync)
+        return self.scheduler.completed
+
+    def close(self) -> None:
+        """Release the planner thread pool (engine stays usable); waits
+        for any in-flight run to drain first."""
+        self.scheduler.close()
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def completed(self) -> list:
+        """Deprecated: poll ``RequestHandle.done()`` / ``.result()``."""
+        warnings.warn(
+            ".completed is deprecated in repro.serving; submit() returns "
+            "RequestHandles — use handle.done() / handle.result()",
+            DeprecationWarning, stacklevel=2)
+        return self.scheduler.completed
+
+    @property
+    def shed(self) -> list:
+        """Requests shed by admission/backpressure (surfaced, not
+        dropped)."""
+        return self.scheduler.shed
+
+    @property
+    def wave_stats(self) -> list[WaveStats]:
+        return self.scheduler.stats
+
+    def timings(self) -> dict:
+        return self.scheduler.timings()
+
+    def slo_stats(self) -> dict:
+        return self.scheduler.slo_stats()

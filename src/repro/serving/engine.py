@@ -16,6 +16,12 @@ queueing/batching/pipelining core for both modalities:
 ``sync=False`` pipelines the stages (wave *k+1* packs while wave *k*
 decodes); results are identical in both modes because EOS handling happens
 entirely at drain time.
+
+The driver API (``submit() -> RequestHandle``, ``serve()``, ``timings()``,
+``slo_stats()``) comes from :class:`repro.serving.api.ServingBase` — the
+same surface as the 3D ``SceneEngine``, so SLO-aware admission
+(``policy=AdmissionPolicy(...)``: priority/deadline ordering, weighted
+tenant fairness, backpressure shedding) applies to LM traffic for free.
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ from repro.models.transformer import (
     decode_step,
     forward,
 )
-from repro.serving.scheduler import WaveScheduler, WaveStats
+from repro.serving.api import AdmissionPolicy, ServeRequest, ServingBase
+from repro.serving.scheduler import WaveScheduler
 
 
 def make_prefill(cfg: ModelConfig, cache_pad: int = 0):
@@ -58,21 +65,24 @@ def make_serve_step(cfg: ModelConfig, moe_groups: int | None = None):
 
 
 @dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
+class Request(ServeRequest):
+    """One prompt to serve; SLO fields (tenant/priority/deadline_ms) come
+    from :class:`~repro.serving.api.ServeRequest` as keyword-only args."""
+
+    prompt: np.ndarray = None
     max_new: int = 16
     out: list = field(default_factory=list)
     done: bool = False
 
 
-class Engine:
+class Engine(ServingBase):
     """Host-side continuous-batching driver (fixed shapes)."""
 
     def __init__(self, cfg: ModelConfig, params, batch: int, prompt_len: int,
                  max_new: int, eos: int | None = None, *,
                  sync: bool = True, depth: int = 2,
-                 planner_threads: int = 2):
+                 planner_threads: int = 2,
+                 policy: AdmissionPolicy | None = None):
         self.cfg, self.params = cfg, params
         self.batch, self.prompt_len, self.max_new = batch, prompt_len, max_new
         self.eos = eos
@@ -81,22 +91,7 @@ class Engine:
         self.scheduler = WaveScheduler(
             batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
             drain=self._drain_stage, sync=sync, depth=depth,
-            planner_threads=planner_threads)
-
-    @property
-    def queue(self):
-        return self.scheduler.queue
-
-    @property
-    def completed(self) -> list[Request]:
-        return self.scheduler.completed
-
-    @property
-    def wave_stats(self) -> list[WaveStats]:
-        return self.scheduler.stats
-
-    def timings(self) -> dict:
-        return self.scheduler.timings()
+            planner_threads=planner_threads, policy=policy)
 
     # -- pipeline stages -----------------------------------------------------
 
@@ -143,15 +138,3 @@ class Engine:
                 if self.eos is not None and int(t) == self.eos:
                     break
             r.done = True
-
-    # -- driver API ----------------------------------------------------------
-
-    def submit(self, reqs: list[Request]) -> None:
-        self.scheduler.submit(reqs)
-
-    def run(self, sync: bool | None = None) -> list[Request]:
-        return self.scheduler.run(sync=sync)
-
-    def close(self) -> None:
-        """Release the planner thread pool (engine stays usable)."""
-        self.scheduler.close()

@@ -1,46 +1,65 @@
-"""Batched 3D-scene serving: fixed-capacity slots, cached plans, one jit.
+"""Batched 3D-scene serving: fixed-capacity slots, cached plans, few jits.
 
 The 3D face of the shared ``serving.scheduler.WaveScheduler``: the host
 packs up to ``batch`` scene requests per wave, builds (or cache-hits) each
 scene's plan, and runs the wave through one jitted forward. All shapes are
-static — scene capacity is fixed, and a pinned ``PlanSpec`` (or, sharded, a
-pinned halo budget) freezes the plan signature — so every wave after the
-first is a jit cache hit (``n_compilations`` stays 1).
+static — scene capacity is fixed per signature, and a pinned ``PlanSpec``
+(or, sharded, a pinned halo budget) freezes the plan signature — so every
+wave after the first is a jit cache hit.
 
 The engine executes under an :class:`~repro.engine.context.ExecutionContext`
 (``ctx=``): the context owns the plan cache (topology mixed into every
-key), the backend registry the jitted forward dispatches through, and —
-for sharded serving — the device mesh. Two serving modes:
+key), the backend registry the jitted forward dispatches through, the
+default admission policy, and — for sharded serving — the device mesh.
+Three serving modes:
 
 * **batched** (default): plans stack along a leading scene axis and one
-  vmapped U-Net forward serves the wave.
+  vmapped U-Net forward serves the wave at a single pinned capacity
+  (``n_compilations`` stays 1).
+* **bucketed** (``family=SignatureFamily(...)``): continuous batching over
+  a small family of capacity tiers. Each request is assigned the smallest
+  bucket its *active* voxels fit at submit time; the plan stage re-packs
+  the scene to the bucket capacity (active rows first — so a client can
+  over-pad its upload and still serve from a small bucket) and admission
+  fills each wave from same-bucket requests. One jit signature per bucket,
+  compiled on first use — mixed traffic compiles at most
+  ``family.n_buckets`` signatures, warm single-size traffic exactly 1.
+  Pair with a :class:`~repro.serving.scheduler.AdmissionPolicy`
+  (``policy=`` or ``ctx.admission``) for priority/deadline admission,
+  weighted tenant fairness, and backpressure shedding.
 * **sharded** (``layout=ShardLayout(...)`` with a pinned ``halo`` budget):
   each scene's capacity axis is split over ``ctx.mesh``'s shard axis; the
   plan stage builds per-shard metadata + halo send tables (pure numpy, on
-  planner threads — the per-shard plan pass pipelines against device
-  execution), and dispatch enqueues one sharded forward per scene. Each
-  wave's ``WaveStats.notes`` records the per-shard plan builds and halo
-  rows, so the shard planning work is observable per wave.
+  planner threads), and dispatch enqueues one sharded forward per scene.
+  Each wave's ``WaveStats.notes`` records the per-shard plan builds and
+  halo rows.
 
 Stage split (the paper's offline-pass/execution overlap, served):
 
 * **plan** — ``PlanCache.get_or_build(device=False)``: the AdMAC + SOAR +
-  SPADE (+ halo split) numpy pass, run on planner threads up to ``depth``
-  waves ahead;
+  SPADE (+ bucket re-pack / halo split) numpy pass, run on planner threads
+  up to ``depth`` waves ahead;
 * **dispatch** — fetch the (memoized) device upload of each plan and
   enqueue the jitted forward without blocking;
-* **drain** — block on the previous wave's logits and fill the requests.
+* **drain** — block on the previous wave's logits and fill the requests
+  (bucketed scenes scatter back to their original row positions).
 
 ``sync=True`` (default) runs the same stages back-to-back — bitwise
-identical results, no overlap; ``sync=False`` pipelines them and reports
-``plan_ms`` / ``device_ms`` / ``overlap_frac`` per wave via ``wave_stats``
-/ ``timings()``.
+identical results given the same admitted wave order, no overlap;
+``sync=False`` pipelines them and reports ``plan_ms`` / ``device_ms`` /
+``overlap_frac`` per wave via ``wave_stats`` / ``timings()``.
 
 Short waves are padded with a copy of the first scene's plan and zero
 features; padding slots are dropped before results are handed back.
+
+The driver API (``submit() -> RequestHandle``, ``serve()``, ``timings()``,
+``slo_stats()``) comes from :class:`repro.serving.api.ServingBase`; the
+pre-handle ``run()`` / ``.completed`` surface survives as deprecation
+shims there.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -49,40 +68,47 @@ import numpy as np
 
 from repro.engine import api as engine_api
 from repro.engine.context import ExecutionContext
-from repro.engine.plan import PlanCache, PlanSpec, ScenePlan
+from repro.engine.plan import PlanCache, PlanSpec, SignatureFamily
 from repro.engine.shard import ShardLayout, build_sharded_scene_plan_host
-from repro.serving.scheduler import WaveScheduler, WaveStats
-from repro.sparse.tensor import SparseVoxelTensor
+from repro.serving.api import AdmissionPolicy, ServeRequest, ServingBase
+from repro.serving.scheduler import WaveScheduler
+from repro.sparse.tensor import SparseVoxelTensor, compact_to_capacity
 
 
 @dataclass
-class SceneRequest:
-    rid: int
-    scene: SparseVoxelTensor
+class SceneRequest(ServeRequest):
+    """One scene to segment; SLO fields (tenant/priority/deadline_ms) come
+    from :class:`~repro.serving.api.ServeRequest` as keyword-only args."""
+
+    scene: SparseVoxelTensor = None
     logits: np.ndarray | None = None   # (capacity, n_classes)
     pred: np.ndarray | None = None     # (capacity,) argmax classes
     done: bool = False
 
 
-class SceneEngine:
+class SceneEngine(ServingBase):
     """Host-side batched scene driver (fixed shapes, plan-cached).
 
     ``spec=None`` serves every scene on the reference backend (always a
     single jit signature); pass ``spec=build_plan_spec(rep_scenes, cfg)``
     to serve the SPADE-planned reference/SSpNNA mix at pinned tile shapes,
-    or ``layout=pin_halo(rep_scenes, cfg, ShardLayout(...))`` (with a
+    ``family=build_signature_family(rep_scenes, cfg)`` for bucketed
+    continuous batching over a family of capacity tiers, or
+    ``layout=pin_halo(rep_scenes, cfg, ShardLayout(...))`` (with a
     mesh-carrying ``ctx``) to serve mesh-sharded scenes. ``sync=False``
     turns on the asynchronous wave pipeline: plan building for wave *k+1*
     overlaps device execution of wave *k* and readback of wave *k−1*
     (``depth`` device waves in flight, ``planner_threads`` host builders).
-    ``sync`` / ``depth`` / ``planner_threads`` default to the context's
-    scheduler wiring when left ``None``.
+    ``sync`` / ``depth`` / ``planner_threads`` / ``policy`` default to the
+    context's scheduler wiring when left ``None``.
     """
 
     def __init__(self, cfg, params, batch: int,
                  spec: PlanSpec | None = None, *,
                  ctx: ExecutionContext | None = None,
                  layout: ShardLayout | None = None,
+                 family: SignatureFamily | None = None,
+                 policy: AdmissionPolicy | None = None,
                  backend: str = "auto", use_kernel: bool = False,
                  interpret: bool | None = None,
                  plan_cache_size: int | None = None,
@@ -97,11 +123,33 @@ class SceneEngine:
                 "plan_cache_size only applies when the engine builds its "
                 "own context; size ctx.plan_cache when passing ctx=")
         self.cfg, self.params, self.batch, self.spec = cfg, params, batch, spec
-        self.ctx, self.layout = ctx, layout
+        self.ctx, self.layout, self.family = ctx, layout, family
         self.cache = ctx.plan_cache
         self._topology = ctx.topology_key()
         self._plan_sig = None  # sharded mode: pinned wave plan signature
-        if layout is not None:
+        if policy is None:
+            policy = ctx.admission
+        if family is not None:
+            if spec is not None:
+                raise ValueError(
+                    "spec= and family= are mutually exclusive: the family "
+                    "carries a pinned spec per capacity bucket")
+            if layout is not None:
+                raise ValueError(
+                    "family= and layout= are mutually exclusive: sharded "
+                    "serving pins a single halo-budget signature")
+            # per-bucket configs share params; only the capacity tier (and
+            # with it the plan/jit signature) differs
+            self._bucket_cfgs = {
+                cap: dataclasses.replace(cfg, capacity=cap)
+                for cap in family.capacities}
+            self._bucket_kw = {
+                cap: dict(spec=family.spec_for(cap),
+                          plan_tiles=family.spec_for(cap) is not None,
+                          order=order, soar_chunk=soar_chunk)
+                for cap in family.capacities}
+            self._builder = None
+        elif layout is not None:
             if spec is not None:
                 raise ValueError(
                     "spec= and layout= are mutually exclusive: sharded "
@@ -130,7 +178,10 @@ class SceneEngine:
             sync=ctx.sync if sync is None else sync,
             depth=ctx.depth if depth is None else depth,
             planner_threads=(ctx.planner_threads if planner_threads is None
-                             else planner_threads))
+                             else planner_threads),
+            policy=policy,
+            bucket_of=((lambda r: getattr(r, "_bucket", None))
+                       if family is not None else None))
 
         if layout is not None:
             def sharded_apply(params, feats, plan):
@@ -159,46 +210,58 @@ class SceneEngine:
 
     @property
     def n_compilations(self) -> int:
-        """Distinct jit signatures compiled so far; -1 if the running jax
-        version doesn't expose the cache-size probe."""
+        """Distinct jit signatures compiled so far (bucketed serving pays
+        one per bucket actually used); -1 if the running jax version
+        doesn't expose the cache-size probe."""
         cache_size = getattr(self._apply, "_cache_size", None)
         return int(cache_size()) if cache_size is not None else -1
 
-    @property
-    def queue(self):
-        return self.scheduler.queue
+    # -- admission -----------------------------------------------------------
 
-    @property
-    def completed(self) -> list[SceneRequest]:
-        return self.scheduler.completed
-
-    @property
-    def wave_stats(self) -> list[WaveStats]:
-        return self.scheduler.stats
-
-    def timings(self) -> dict:
-        return self.scheduler.timings()
+    def _prepare(self, req: SceneRequest) -> str | None:
+        """Bucket assignment at submit time (bucketed mode): the smallest
+        family capacity the scene's active voxels fit; a scene exceeding
+        every bucket is shed with reason ``"capacity"``."""
+        if self.family is None:
+            return None
+        n_active = int(np.asarray(req.scene.mask).sum())
+        cap = self.family.bucket_for(n_active)
+        if cap is None:
+            return "capacity"
+        req._bucket = cap
+        req._n_active = n_active
+        return None
 
     # -- pipeline stages -----------------------------------------------------
 
-    def _plan_stage(self, req: SceneRequest) -> tuple[str, ScenePlan]:
+    def _plan_stage(self, req: SceneRequest):
         """Host-side plan build (numpy leaves); runs on planner threads.
 
         The payload carries the cache key so the dispatch thread never
-        re-hashes the scene on the critical path."""
-        key = self.cache.key_for(req.scene, self.cfg,
-                                 topology=self._topology, **self._plan_kw)
-        plan = self.cache.get_or_build(req.scene, self.cfg, device=False,
+        re-hashes the scene on the critical path. Bucketed mode re-packs
+        the scene to its bucket capacity first (active rows in original
+        order) and remembers the row mapping for the drain scatter."""
+        if self.family is not None:
+            cap = req._bucket
+            scene, active_idx = compact_to_capacity(req.scene, cap)
+            req._active_idx = active_idx
+            cfg, plan_kw = self._bucket_cfgs[cap], self._bucket_kw[cap]
+        else:
+            scene, cfg, plan_kw = req.scene, self.cfg, self._plan_kw
+        key = self.cache.key_for(scene, cfg,
+                                 topology=self._topology, **plan_kw)
+        plan = self.cache.get_or_build(scene, cfg, device=False,
                                        key=key, builder=self._builder,
-                                       **self._plan_kw)
+                                       **plan_kw)
+        if self.family is not None:
+            return key, plan, scene.feats  # re-packed feats (numpy)
         return key, plan
 
     def _dispatch_stage(self, reqs: list[SceneRequest], payloads, stats):
         # the plan stage built (and counted) these host plans; adopt fetches
         # the memoized device upload without rebuilding (even if LRU
         # pressure evicted the entry) and without skewing hits/misses
-        plans = [self.cache.adopt(key, hp, device=True)
-                 for key, hp in payloads]
+        plans = [self.cache.adopt(p[0], p[1], device=True) for p in payloads]
         if self.layout is not None:
             # the pinned halo budget promises one jit signature across
             # every wave; a diverging plan (wrong capacity, re-pinned
@@ -217,7 +280,7 @@ class SceneEngine:
             stats.notes["plan_shards"] = self.layout.n_shards
             stats.notes["plan_builds"] = len(payloads)
             stats.notes["halo_rows"] = sum(
-                hp.halo_rows() for _, hp in payloads)
+                p[1].halo_rows() for p in payloads)
             # per-scene sharded forwards; jax async dispatch keeps the
             # loop non-blocking, so the wave still pipelines as one unit
             return [self._apply(self.params, r.scene.feats, p)
@@ -229,7 +292,18 @@ class SceneEngine:
                     f"scene {r.rid}: plan signature diverged from "
                     "the wave (tile-budget overflow?); raise "
                     "tile_margin in build_plan_spec")
-        feats = [r.scene.feats for r in reqs]
+        if self.family is not None:
+            # admission guarantees a single-bucket wave; a mixed wave here
+            # means the bucket hook was bypassed — fail before compiling a
+            # stray signature
+            caps = {r._bucket for r in reqs}
+            if len(caps) != 1:
+                raise RuntimeError(
+                    f"wave mixes capacity buckets {sorted(caps)}; bucketed "
+                    "serving admits one bucket per wave")
+            feats = [jnp.asarray(p[2]) for p in payloads]
+        else:
+            feats = [r.scene.feats for r in reqs]
         while len(plans) < self.batch:  # pad the wave to fixed batch
             plans.append(plans[0])
             feats.append(jnp.zeros_like(feats[0]))
@@ -241,20 +315,15 @@ class SceneEngine:
         else:
             logits = np.asarray(logits)
         for i, r in enumerate(reqs):
-            r.logits = logits[i]
-            r.pred = logits[i].argmax(-1)
+            if self.family is not None:
+                # scatter compacted-bucket rows back to the request's
+                # original row positions (padding rows stay zero-logit)
+                idx = r._active_idx
+                out = np.zeros((r.scene.capacity, logits.shape[-1]),
+                               logits.dtype)
+                out[idx] = logits[i][: len(idx)]
+                r.logits = out
+            else:
+                r.logits = logits[i]
+            r.pred = r.logits.argmax(-1)
             r.done = True
-
-    # -- driver API ----------------------------------------------------------
-
-    def submit(self, reqs: list[SceneRequest]) -> None:
-        self.scheduler.submit(reqs)
-
-    def run(self, sync: bool | None = None) -> list[SceneRequest]:
-        """Serve the queue to empty (``sync=None`` keeps the constructor
-        mode); a stage failure re-queues the affected waves and re-raises."""
-        return self.scheduler.run(sync=sync)
-
-    def close(self) -> None:
-        """Release the planner thread pool (engine stays usable)."""
-        self.scheduler.close()

@@ -23,26 +23,55 @@ observations in ``stats.notes`` (e.g. the sharded scene engine records the
 per-shard plan builds and halo rows of each wave) — they ride along with
 the timing rows in ``scheduler.stats``.
 
+Admission is FIFO by default. Passing an :class:`AdmissionPolicy` (and/or a
+``bucket_of`` compatibility hook) turns on *continuous batching with
+SLO-aware admission* — the vLLM-style idea transplanted onto scene waves:
+
+* each wave is filled greedily from the most urgent **compatible** queued
+  requests (same ``bucket_of`` key — e.g. the scene engine's capacity
+  bucket), so a straggler at the head of the queue is preempted to a later
+  wave instead of head-of-line blocking everything behind it;
+* urgency is strict ``priority`` first, then weighted per-tenant fairness
+  (stride scheduling over ``tenant_weights`` — a one-tenant flood cannot
+  starve the others), then earliest deadline, then arrival order;
+* requests whose ``deadline_ms`` has already expired are **shed** at
+  admission time — surfaced on ``scheduler.shed`` with ``status="shed"``
+  and a ``shed_reason``, never silently dropped — and ``max_queue``
+  bounds the queue with explicit overload shedding at submit time
+  (backpressure instead of unbounded buffering).
+
 ``sync=True`` degenerates to the classic blocking wave loop (same stages,
 run back-to-back on the caller's thread) — numerics are identical in both
-modes because the stages are. Any stage exception re-queues every admitted
-but uncompleted request at the front of the queue (in-flight device waves
-are drained first), so a poisoned wave neither deadlocks the pipeline nor
-drops requests.
+modes because the stages are *and* admission is: both modes admit from the
+same queue state with the same policy, so the same admitted wave order
+produces bitwise-identical results. Any stage exception re-queues every
+admitted but uncompleted request at the front of the queue (in-flight
+device waves are drained first), so a poisoned wave neither deadlocks the
+pipeline nor drops requests.
 
-Per-wave ``WaveStats`` make the overlap measurable: ``plan_ms`` is the host
-plan work (summed over requests), ``plan_span_ms`` its wall-clock span,
-``plan_wait_ms`` the span remainder the dispatcher actually had to wait
-for, and ``overlap_frac = 1 - wait/span`` the fraction hidden behind
-device execution (0 in sync mode by construction).
+Per-wave ``WaveStats`` make the overlap *and* the admission measurable:
+``plan_ms`` is the host plan work (summed over requests), ``plan_span_ms``
+its wall-clock span, ``plan_wait_ms`` the span remainder the dispatcher
+actually had to wait for, ``overlap_frac = 1 - wait/span`` the fraction
+hidden behind device execution (0 in sync mode by construction);
+``queue_depth`` / ``bucket`` / ``fill_frac`` / ``n_shed`` describe what
+admission saw and decided. ``slo_stats()`` aggregates the per-request
+view: p50/p99 latency, deadline goodput, shed counts.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from collections.abc import Callable, Sequence
+from collections.abc import Callable, Mapping, Sequence
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
+
+# request lifecycle states (mirrored by serving.api.ServeRequest.status)
+QUEUED = "queued"
+RUNNING = "running"
+COMPLETED = "completed"
+SHED = "shed"
 
 
 def overlap_fraction(plan_span_ms: float, plan_wait_ms: float) -> float:
@@ -55,9 +84,34 @@ def overlap_fraction(plan_span_ms: float, plan_wait_ms: float) -> float:
     return max(0.0, min(1.0, 1.0 - plan_wait_ms / plan_span_ms))
 
 
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """SLO-aware admission knobs for :class:`WaveScheduler`.
+
+    ``max_queue`` is the backpressure bound: a submit beyond it is shed
+    immediately with ``shed_reason="overload"`` (the caller gets the
+    request back with ``status="shed"``, never a silent drop).
+    ``shed_expired`` sheds requests whose ``submit_ts + deadline_ms`` has
+    passed at admission time with ``shed_reason="deadline"``.
+    ``tenant_weights`` drive stride-scheduled weighted fairness between
+    tenants (missing tenants get ``default_weight``); a tenant with twice
+    the weight gets twice the admitted share under contention.
+    """
+
+    max_queue: int | None = None
+    shed_expired: bool = True
+    tenant_weights: Mapping[str, float] | None = None
+    default_weight: float = 1.0
+
+    def weight(self, tenant: str) -> float:
+        w = (self.tenant_weights or {}).get(tenant, self.default_weight)
+        return max(float(w), 1e-9)
+
+
 @dataclass
 class WaveStats:
-    """Timing of one wave through the plan/dispatch/drain stages (ms)."""
+    """Timing of one wave through the plan/dispatch/drain stages (ms),
+    plus what admission saw when it formed the wave."""
 
     wave: int
     rids: tuple
@@ -68,6 +122,10 @@ class WaveStats:
     dispatch_ms: float = 0.0   # host time enqueueing the jitted call
     device_ms: float = 0.0     # dispatch call -> results drained
     drain_ms: float = 0.0      # time blocked in readback
+    queue_depth: int = 0       # queue length when admission ran
+    n_shed: int = 0            # requests shed by this admission pass
+    bucket: object = None      # bucket_of key the wave was filled from
+    fill_frac: float = 1.0     # admitted / batch (padding slots are waste)
     #: engine-specific observations the dispatch stage records (e.g. the
     #: sharded scene engine's per-shard plan builds / halo rows)
     notes: dict = field(default_factory=dict)
@@ -80,6 +138,20 @@ class WaveStats:
 
 def _now_ms() -> float:
     return time.perf_counter() * 1e3
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Linear-interpolated percentile of an ascending list (numpy-free so
+    the scheduler core stays dependency-light)."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = (len(sorted_vals) - 1) * q
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
 
 
 class WaveScheduler:
@@ -95,6 +167,8 @@ class WaveScheduler:
         sync: bool = True,
         depth: int = 2,
         planner_threads: int = 2,
+        policy: AdmissionPolicy | None = None,
+        bucket_of: Callable | None = None,
     ):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -107,41 +181,196 @@ class WaveScheduler:
         self.sync = sync
         self.depth = depth
         self.planner_threads = planner_threads
+        self.policy = policy
+        self.bucket_of = bucket_of
         self._plan, self._dispatch, self._drain = plan, dispatch, drain
         self.queue: deque = deque()
         self.completed: list = []
+        self.shed: list = []
         self.stats: list[WaveStats] = []
         #: mode of the run in progress (stages may consult it to trade
         #: host syncs for pipelining); None outside ``run``
         self.running_sync: bool | None = None
         self._wave = 0
+        self._seq = 0
         self._pool: ThreadPoolExecutor | None = None  # lazy, persists runs
+        self._pool_lock = threading.Lock()
+        self._idle = threading.Event()  # cleared while run() is on a thread
+        self._idle.set()
+        # stride-scheduling state: per-tenant virtual pass + global floor
+        self._tenant_pass: dict[str, float] = {}
+        self._vt = 0.0
+        self._admit_info: dict = {}
 
     # -- queue plumbing ------------------------------------------------------
 
+    @property
+    def running(self) -> bool:
+        """True while a ``run()`` is in progress on some thread."""
+        return not self._idle.is_set()
+
+    def enqueue(self, r, *, shed: str | None = None):
+        """Admit one request into the queue: stamps ``submit_ts`` / ``seq``
+        / ``status`` (on requests that carry them), applies the policy's
+        backpressure bound, and returns the request. ``shed=`` lets a
+        caller surface a request it already knows cannot be served (e.g.
+        no capacity bucket fits) through the same shed plumbing."""
+        self._stamp(r)
+        if shed is not None:
+            self.shed_request(r, shed)
+            return r
+        pol = self.policy
+        if (pol is not None and pol.max_queue is not None
+                and len(self.queue) >= pol.max_queue):
+            self.shed_request(r, "overload")
+            return r
+        self.queue.append(r)
+        return r
+
     def submit(self, reqs: Sequence) -> None:
-        self.queue.extend(reqs)
+        for r in reqs:
+            self.enqueue(r)
 
     def __len__(self) -> int:
         return len(self.queue)
 
+    def _stamp(self, r) -> None:
+        """Give a request its arrival metadata; tolerate bare objects that
+        don't carry the ServeRequest fields (legacy scheduler users)."""
+        try:
+            if getattr(r, "submit_ts", None) is None:
+                r.submit_ts = _now_ms()
+            if getattr(r, "seq", -1) < 0:
+                r.seq = self._seq
+                self._seq += 1
+            if getattr(r, "_event", None) is None:
+                r._event = threading.Event()
+            r.status = QUEUED
+        except (AttributeError, TypeError):
+            pass
+
+    def _set_status(self, r, status: str) -> None:
+        try:
+            r.status = status
+        except (AttributeError, TypeError):
+            return
+        if status in (COMPLETED, SHED):
+            try:
+                r.done_ts = _now_ms()
+            except (AttributeError, TypeError):
+                pass
+            ev = getattr(r, "_event", None)
+            if ev is not None:
+                ev.set()
+
+    def shed_request(self, r, reason: str) -> None:
+        """Shed ``r`` with ``shed_reason=reason``: the request is surfaced
+        on ``self.shed`` (and its completion event fires) — load shedding
+        is explicit, never a silent drop."""
+        try:
+            r.shed_reason = reason
+        except (AttributeError, TypeError):
+            pass
+        self._set_status(r, SHED)
+        self.shed.append(r)
+
+    @staticmethod
+    def _expired(r, now: float) -> bool:
+        deadline = getattr(r, "deadline_ms", None)
+        submit_ts = getattr(r, "submit_ts", None)
+        return (deadline is not None and submit_ts is not None
+                and now > submit_ts + deadline)
+
+    def _admit_key(self, r):
+        """Urgency ordering: strict priority, then weighted tenant
+        fairness, then earliest deadline, then arrival order."""
+        deadline = getattr(r, "deadline_ms", None)
+        submit_ts = getattr(r, "submit_ts", None) or 0.0
+        expires = (submit_ts + deadline) if deadline is not None \
+            else float("inf")
+        tenant = getattr(r, "tenant", "default")
+        return (-getattr(r, "priority", 0),
+                self._tenant_pass.get(tenant, self._vt),
+                expires, getattr(r, "seq", 0))
+
+    def _charge_tenant(self, r) -> None:
+        pol = self.policy
+        if pol is None:
+            return
+        tenant = getattr(r, "tenant", "default")
+        p = self._tenant_pass.get(tenant, self._vt)
+        self._tenant_pass[tenant] = p + 1.0 / pol.weight(tenant)
+        self._vt = max(self._vt, p)
+
     def _admit(self) -> list:
-        return [self.queue.popleft()
-                for _ in range(min(self.batch, len(self.queue)))]
+        """Form the next wave. FIFO without a policy/bucket hook; with one,
+        greedy continuous batching: shed expired requests, then fill from
+        the most urgent compatible (same-bucket) candidates, preempting
+        stragglers to later waves. May return ``[]`` when shedding emptied
+        the queue — the caller skips the wave without a dispatch."""
+        depth0 = len(self.queue)
+        if self.policy is None and self.bucket_of is None:
+            reqs = [self.queue.popleft()
+                    for _ in range(min(self.batch, len(self.queue)))]
+            for r in reqs:
+                self._set_status(r, RUNNING)
+            self._admit_info = dict(queue_depth=depth0, n_shed=0,
+                                    bucket=None, n_admitted=len(reqs))
+            return reqs
+        now = _now_ms()
+        n_shed = 0
+        pending: list = []
+        for r in self.queue:
+            if (self.policy is not None and self.policy.shed_expired
+                    and self._expired(r, now)):
+                self.shed_request(r, "deadline")
+                n_shed += 1
+            else:
+                pending.append(r)
+        admitted: list = []
+        bucket = None
+        avail = list(pending)
+        while avail and len(admitted) < self.batch:
+            best = min(avail, key=self._admit_key)
+            if not admitted and self.bucket_of is not None:
+                # first pick fixes the wave's signature bucket; everything
+                # incompatible waits for a later wave instead of blocking
+                bucket = self.bucket_of(best)
+                avail = [r for r in avail
+                         if self.bucket_of(r) == bucket]
+            admitted.append(best)
+            avail.remove(best)
+            self._charge_tenant(best)
+            self._set_status(best, RUNNING)
+        admitted_ids = {id(r) for r in admitted}
+        self.queue.clear()
+        self.queue.extend(r for r in pending if id(r) not in admitted_ids)
+        self._admit_info = dict(queue_depth=depth0, n_shed=n_shed,
+                                bucket=bucket, n_admitted=len(admitted))
+        return admitted
 
     def _requeue(self, waves: list[list]) -> None:
         """Put admitted-but-uncompleted waves back at the queue front."""
         pending = [r for wave in waves for r in wave]
+        for r in pending:
+            self._set_status(r, QUEUED)
         self.queue.extendleft(reversed(pending))
 
     def _new_stats(self, reqs: list, sync: bool) -> WaveStats:
+        info = self._admit_info
         st = WaveStats(self._wave, tuple(getattr(r, "rid", None)
-                                         for r in reqs), sync)
+                                         for r in reqs), sync,
+                       queue_depth=info.get("queue_depth", len(reqs)),
+                       n_shed=info.get("n_shed", 0),
+                       bucket=info.get("bucket"),
+                       fill_frac=len(reqs) / self.batch)
         self._wave += 1
         return st
 
     def _finish(self, reqs: list, st: WaveStats) -> None:
         self.stats.append(st)
+        for r in reqs:
+            self._set_status(r, COMPLETED)
         self.completed.extend(reqs)
 
     def timings(self) -> dict:
@@ -158,18 +387,62 @@ class WaveScheduler:
             "overlap_frac": overlap_fraction(span, wait),
         }
 
+    def slo_stats(self) -> dict:
+        """Per-request SLO view over everything served (or shed) so far:
+        p50/p99 end-to-end latency (submit -> drain, ms), deadline goodput
+        (completions that met their deadline, as a fraction of everything
+        submitted and as completions/s), and shed counts by reason."""
+        lats = []
+        met = 0
+        for r in self.completed:
+            t0 = getattr(r, "submit_ts", None)
+            t1 = getattr(r, "done_ts", None)
+            if t0 is None or t1 is None:
+                continue
+            lats.append(t1 - t0)
+            deadline = getattr(r, "deadline_ms", None)
+            if deadline is None or (t1 - t0) <= deadline:
+                met += 1
+        lats.sort()
+        shed_by_reason: dict[str, int] = {}
+        for r in self.shed:
+            reason = getattr(r, "shed_reason", None) or "unknown"
+            shed_by_reason[reason] = shed_by_reason.get(reason, 0) + 1
+        n_total = len(self.completed) + len(self.shed)
+        ts = [getattr(r, "submit_ts", None) for r in self.completed]
+        te = [getattr(r, "done_ts", None) for r in self.completed]
+        ts = [t for t in ts if t is not None]
+        te = [t for t in te if t is not None]
+        wall_s = (max(te) - min(ts)) / 1e3 if ts and te else 0.0
+        return {
+            "n_completed": len(self.completed),
+            "n_shed": len(self.shed),
+            "shed_by_reason": shed_by_reason,
+            "p50_ms": _percentile(lats, 0.50),
+            "p99_ms": _percentile(lats, 0.99),
+            "goodput_frac": met / n_total if n_total else 0.0,
+            "goodput_rps": met / wall_s if wall_s > 0 else 0.0,
+        }
+
     # -- execution -----------------------------------------------------------
 
-    def run(self, sync: bool | None = None) -> list:
-        """Serve the queue to empty; returns the completed-request list."""
+    def run(self, sync: bool | None = None,
+            max_waves: int | None = None) -> list:
+        """Serve the queue (to empty, or at most ``max_waves`` admitted
+        waves — the tick-driven mode arrival simulators use); returns the
+        completed-request list. Only one ``run`` may be active at a time."""
+        if not self._idle.is_set():
+            raise RuntimeError("run() already in progress on another thread")
+        self._idle.clear()
         self.running_sync = self.sync if sync is None else sync
         try:
             if self.running_sync:
-                self._run_sync()
+                self._run_sync(max_waves)
             else:
-                self._run_async()
+                self._run_async(max_waves)
         finally:
             self.running_sync = None
+            self._idle.set()
         return self.completed
 
     def _timed_plan(self, req):
@@ -177,9 +450,13 @@ class WaveScheduler:
         payload = self._plan(req)
         return payload, t0, _now_ms()
 
-    def _run_sync(self) -> None:
-        while self.queue:
+    def _run_sync(self, max_waves: int | None = None) -> None:
+        waves_left = max_waves if max_waves is not None else float("inf")
+        while self.queue and waves_left > 0:
             reqs = self._admit()
+            if not reqs:  # admission shed everything: no wave, no dispatch
+                continue
+            waves_left -= 1
             st = self._new_stats(reqs, sync=True)
             try:
                 payloads = []
@@ -204,30 +481,41 @@ class WaveScheduler:
     def _pool_or_start(self) -> ThreadPoolExecutor:
         # lazy and persistent: paced workloads call run() per arrival group
         # and should not pay thread churn every time
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.planner_threads,
-                thread_name_prefix="wave-planner")
-        return self._pool
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.planner_threads,
+                    thread_name_prefix="wave-planner")
+            return self._pool
 
     def close(self) -> None:
         """Shut down the planner thread pool (idempotent; a later run()
-        lazily recreates it)."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=True, cancel_futures=True)
-            self._pool = None
+        lazily recreates it). Waits for any in-flight ``run`` — and with
+        it every planner-thread future — to drain first, so a close racing
+        an async run can neither cancel its plan builds nor leave the pool
+        half-down."""
+        self._idle.wait()
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
-    def _run_async(self) -> None:
+    def _run_async(self, max_waves: int | None = None) -> None:
         pool = self._pool_or_start()
+        waves_left = max_waves if max_waves is not None else float("inf")
         planned: deque = deque()   # (reqs, stats, [plan futures])
         inflight: deque = deque()  # (reqs, stats, handle, t_dispatched)
         failed: list = []          # requests of the wave that blew up
         futs: list = []            # plan futures of the wave being gathered
         try:
-            while self.queue or planned or inflight:
+            while (self.queue and waves_left > 0) or planned or inflight:
                 # keep up to `depth` waves in the plan stage
-                while self.queue and len(planned) < self.depth:
+                while (self.queue and waves_left > 0
+                       and len(planned) < self.depth):
                     reqs = self._admit()
+                    if not reqs:  # everything shed: nothing to plan
+                        continue
+                    waves_left -= 1
                     failed = reqs  # cover the gap until safely planned
                     st = self._new_stats(reqs, sync=False)
                     wave_futs = [pool.submit(self._timed_plan, r)
@@ -259,8 +547,9 @@ class WaveScheduler:
                     futs = []
                 # drain once the device pipeline is `depth` deep, or
                 # unconditionally when there is nothing left to feed it
-                while inflight and (len(inflight) >= self.depth
-                                    or not (self.queue or planned)):
+                while inflight and (
+                        len(inflight) >= self.depth
+                        or not ((self.queue and waves_left > 0) or planned)):
                     item = inflight.popleft()
                     failed = item[0]
                     self._drain_one(item)

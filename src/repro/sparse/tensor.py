@@ -47,6 +47,36 @@ class SparseVoxelTensor(NamedTuple):
         return SparseVoxelTensor(self.coords, feats, self.mask)
 
 
+def compact_to_capacity(
+    t: SparseVoxelTensor, capacity: int,
+) -> tuple[SparseVoxelTensor, np.ndarray]:
+    """Re-pack a scene into a (possibly different) fixed capacity: active
+    rows first in their original order, padding after. Host-side numpy —
+    this is the bucketed serving path's plan-stage re-pack, so a scene a
+    client padded to any capacity serves from the smallest signature
+    bucket its *active* voxels fit.
+
+    Returns ``(compacted tensor with numpy leaves, active_idx)`` where
+    ``active_idx`` maps compacted row ``i`` back to source row
+    ``active_idx[i]`` (scatter results back with it at drain time).
+    """
+    mask = np.asarray(t.mask)
+    idx = np.flatnonzero(mask)
+    n = len(idx)
+    if n > capacity:
+        raise ValueError(
+            f"capacity {capacity} < active voxels {n}; pick a larger bucket")
+    coords_src = np.asarray(t.coords)
+    feats_src = np.asarray(t.feats)
+    coords = np.full((capacity, 3), PAD_COORD, np.int32)
+    feats = np.zeros((capacity, feats_src.shape[-1]), feats_src.dtype)
+    out_mask = np.zeros((capacity,), bool)
+    coords[:n] = coords_src[idx]
+    feats[:n] = feats_src[idx]
+    out_mask[:n] = True
+    return SparseVoxelTensor(coords, feats, out_mask), idx
+
+
 MAX_RESOLUTION = 1290  # largest R with R**3 < 2**31 (int32-safe linear keys)
 
 

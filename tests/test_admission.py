@@ -1,0 +1,369 @@
+"""SLO-aware admission + bucketed continuous batching + the handle API.
+
+Scheduler-level tests run on stub stages (no jax) so the admission logic
+is exercised fast and deterministically; the SceneEngine integration
+tests serve real scenes through a ``SignatureFamily``.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic local shim
+    from _hypothesis_mini import given, settings, strategies as st
+
+from repro import engine
+from repro.data.scenes import N_CLASSES, make_scene
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving import (
+    COMPLETED,
+    QUEUED,
+    SHED,
+    AdmissionPolicy,
+    RequestHandle,
+    RequestShedError,
+    ServeRequest,
+    WaveScheduler,
+)
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.sparse.tensor import SparseVoxelTensor, compact_to_capacity
+
+RES, CAP = 16, 1024
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level admission (stub stages, no jax)
+# ---------------------------------------------------------------------------
+
+def _stub_sched(batch=2, policy=None, bucket_of=None, waves=None, **kw):
+    """WaveScheduler over no-op stages; `waves` records admitted rids."""
+    rec = waves if waves is not None else []
+
+    def dispatch(reqs, payloads, stats):
+        rec.append([r.rid for r in reqs])
+        return payloads
+
+    return WaveScheduler(batch=batch, plan=lambda r: r.rid,
+                         dispatch=dispatch, drain=lambda rs, h: None,
+                         policy=policy, bucket_of=bucket_of, **kw)
+
+
+def test_priority_preempts_fifo_order():
+    waves = []
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(), waves=waves)
+    reqs = [ServeRequest(0), ServeRequest(1),
+            ServeRequest(2, priority=5), ServeRequest(3, priority=5)]
+    sched.submit(reqs)
+    sched.run()
+    assert waves == [[2, 3], [0, 1]]
+    assert all(r.status == COMPLETED for r in reqs)
+
+
+def test_deadline_expired_requests_shed_not_dropped():
+    waves = []
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(), waves=waves)
+    live = ServeRequest(0)
+    dead = ServeRequest(1, deadline_ms=5.0)
+    sched.submit([live, dead])
+    dead.submit_ts -= 10_000.0  # long expired by the time admission runs
+    sched.run()
+    assert dead.status == SHED and dead.shed_reason == "deadline"
+    assert dead in sched.shed and dead.done_ts is not None
+    assert waves == [[0]] and live.status == COMPLETED
+    # the shed is surfaced on the handle too, never silently swallowed
+    with pytest.raises(RequestShedError, match="deadline"):
+        RequestHandle(dead, sched).result()
+    stats = sched.slo_stats()
+    assert stats["n_shed"] == 1
+    assert stats["shed_by_reason"] == {"deadline": 1}
+
+
+def test_all_shed_wave_skipped_without_dispatch():
+    waves = []
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(), waves=waves)
+    reqs = [ServeRequest(i, deadline_ms=5.0) for i in range(4)]
+    sched.submit(reqs)
+    for r in reqs:
+        r.submit_ts -= 10_000.0
+    sched.run()
+    assert waves == [] and sched.stats == []  # no wave formed, no dispatch
+    assert all(r.status == SHED for r in reqs) and len(sched.shed) == 4
+
+
+def test_backpressure_sheds_overload_at_submit():
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(max_queue=2))
+    reqs = [ServeRequest(i) for i in range(3)]
+    sched.submit(reqs)
+    assert len(sched.queue) == 2
+    assert reqs[2].status == SHED and reqs[2].shed_reason == "overload"
+    sched.run()
+    assert [r.status for r in reqs] == [COMPLETED, COMPLETED, SHED]
+
+
+def test_waves_fill_from_a_single_bucket():
+    waves = []
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(),
+                        bucket_of=lambda r: r.tenant, waves=waves)
+    # interleaved buckets: FIFO would head-of-line block every wave
+    reqs = [ServeRequest(i, tenant="ab"[i % 2]) for i in range(6)]
+    sched.submit(reqs)
+    sched.run()
+    for w in waves:
+        assert len({reqs[rid].tenant for rid in w}) == 1  # never mixed
+    assert sorted(r for w in waves for r in w) == list(range(6))
+    # a straggler bucket defers to later waves instead of blocking: the
+    # first wave fills to batch from one bucket, FIFO would stop at rid 0
+    assert len(waves[0]) == 2
+    # admission records what it saw per wave
+    for s, w in zip(sched.stats, waves):
+        assert s.bucket == reqs[w[0]].tenant
+        assert s.fill_frac == len(w) / sched.batch
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 30), st.integers(1, 8), st.integers(1, 4))
+def test_weighted_fairness_never_starves_late_tenant(n_a, n_b, w_b):
+    """Stride scheduling: a tenant-a flood submitted first cannot starve
+    tenant b; b's admitted share tracks its weight."""
+    waves = []
+    pol = AdmissionPolicy(tenant_weights={"b": float(w_b)})
+    sched = _stub_sched(batch=1, policy=pol, waves=waves)
+    sched.submit([ServeRequest(i, tenant="a") for i in range(n_a)])
+    sched.submit([ServeRequest(100 + i, tenant="b") for i in range(n_b)])
+    sched.run()
+    order = [w[0] for w in waves]
+    assert len(order) == n_a + n_b  # everyone serves eventually
+    a_seen = b_seen = 0
+    for rid in order:
+        if rid < 100:
+            a_seen += 1
+        else:
+            b_seen += 1
+        if b_seen < n_b:
+            # while b has pending work, a's admissions are bounded by the
+            # stride ratio (pass_a = a_seen*1 vs pass_b = b_seen/w_b)
+            assert a_seen <= b_seen / w_b + 2
+
+
+def test_sync_async_admit_identical_wave_order():
+    def serve(sync):
+        waves = []
+        sched = _stub_sched(
+            batch=2, policy=AdmissionPolicy(),
+            bucket_of=lambda r: r.tenant, waves=waves, sync=sync)
+        sched.submit([
+            ServeRequest(i, tenant="ab"[i % 2], priority=i % 3)
+            for i in range(8)])
+        sched.run()
+        return waves
+
+    assert serve(True) == serve(False)
+
+
+def test_run_rejects_reentry_and_max_waves_ticks():
+    waves = []
+    sched = _stub_sched(batch=2, policy=AdmissionPolicy(), waves=waves)
+    sched.submit([ServeRequest(i) for i in range(6)])
+    sched.run(max_waves=1)
+    assert len(waves) == 1 and len(sched.queue) == 4
+    sched.run(max_waves=2)
+    assert len(waves) == 3 and not sched.queue
+    # reentry guard: run() while running raises instead of corrupting state
+    blocker = threading.Event()
+    slow = WaveScheduler(batch=1, plan=lambda r: r,
+                         dispatch=lambda rs, ps, st: blocker.wait(5),
+                         drain=lambda rs, h: None)
+    slow.submit([ServeRequest(0)])
+    t = threading.Thread(target=slow.run)
+    t.start()
+    while not slow.running:
+        pass
+    with pytest.raises(RuntimeError, match="in progress"):
+        slow.run()
+    blocker.set()
+    t.join()
+
+
+# ---------------------------------------------------------------------------
+# SignatureFamily / compact_to_capacity units
+# ---------------------------------------------------------------------------
+
+def test_choose_buckets_quantized_and_covering():
+    caps = engine.choose_buckets([100, 120, 130, 700], max_buckets=2,
+                                 quantum=64)
+    assert caps == tuple(sorted(set(caps)))
+    assert all(c % 64 == 0 for c in caps)
+    assert caps[-1] >= 700  # top tier covers the largest observed scene
+    assert len(caps) <= 2
+    with pytest.raises(ValueError):
+        engine.choose_buckets([])
+
+
+def test_signature_family_bucket_assignment():
+    fam = engine.SignatureFamily((256, 1024))
+    assert fam.n_buckets == 2 and fam.max_capacity == 1024
+    assert fam.bucket_for(1) == 256 and fam.bucket_for(256) == 256
+    assert fam.bucket_for(257) == 1024
+    assert fam.bucket_for(2048) is None  # too big for every bucket
+    with pytest.raises(ValueError, match="ascending"):
+        engine.SignatureFamily((1024, 256))
+    with pytest.raises(ValueError):
+        engine.SignatureFamily(())
+
+
+def test_compact_to_capacity_roundtrip():
+    coords, feats, _, mask = make_scene(3, resolution=RES, capacity=CAP)
+    t = SparseVoxelTensor(coords, feats, mask)
+    n = int(np.asarray(mask).sum())
+    cap = int(np.ceil(n / 64) * 64)
+    small, idx = compact_to_capacity(t, cap)
+    assert small.capacity == cap and len(idx) == n
+    assert int(small.mask.sum()) == n
+    np.testing.assert_array_equal(small.coords[:n],
+                                  np.asarray(t.coords)[idx])
+    np.testing.assert_array_equal(small.feats[:n],
+                                  np.asarray(t.feats)[idx])
+    with pytest.raises(ValueError, match="larger bucket"):
+        compact_to_capacity(t, max(n - 1, 0))
+
+
+# ---------------------------------------------------------------------------
+# SceneEngine integration: bucketed serving end to end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _scene_with(seed, n_active):
+    """A CAP-capacity scene trimmed to exactly n_active active voxels."""
+    coords, feats, _, mask = make_scene(seed, resolution=RES, capacity=CAP)
+    mask = np.asarray(mask).copy()
+    idx = np.flatnonzero(mask)
+    assert len(idx) >= n_active, "raise RES or lower n_active"
+    mask[idx[n_active:]] = False
+    return SparseVoxelTensor(np.asarray(coords), np.asarray(feats), mask)
+
+
+def test_bucketed_serving_matches_single_signature(setup):
+    cfg, params = setup
+    fam = engine.SignatureFamily((256, CAP))
+    scenes = [_scene_with(10 + i, 120 + 10 * i) for i in range(3)]  # small
+    scenes += [_scene_with(20 + i, 500 + 10 * i) for i in range(3)]  # big
+    eng = SceneEngine(cfg, params, batch=2, family=fam,
+                      policy=AdmissionPolicy())
+    handles = eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    eng.serve()
+    # one compiled signature per bucket actually used, never more
+    assert eng.n_compilations == 2
+    for s in eng.wave_stats:
+        assert s.bucket in (256, CAP)
+    # results come back at the request's original capacity, equal (on
+    # active rows) to plain single-signature serving
+    ref = SceneEngine(cfg, params, batch=2)
+    ref_handles = ref.submit(
+        [SceneRequest(i, s) for i, s in enumerate(scenes)])
+    ref.serve()
+    for h, rh in zip(handles, ref_handles):
+        r, rr = h.result(), rh.result()
+        assert r.logits.shape == rr.logits.shape == (CAP, N_CLASSES)
+        m = np.asarray(r.scene.mask)
+        np.testing.assert_allclose(r.logits[m], rr.logits[m],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(r.logits[~m], 0.0)  # padding rows
+    eng.close(), ref.close()
+
+
+def test_warm_single_size_traffic_compiles_once(setup):
+    cfg, params = setup
+    fam = engine.SignatureFamily((256, CAP))
+    eng = SceneEngine(cfg, params, batch=2, family=fam)
+    for i in range(4):  # same bucket every wave: exactly one signature
+        eng.submit(SceneRequest(i, _scene_with(40 + i, 150)))
+    eng.serve()
+    assert eng.n_compilations == 1
+    assert all(s.bucket == 256 for s in eng.wave_stats)
+    eng.close()
+
+
+def test_oversize_scene_shed_with_capacity_reason(setup):
+    cfg, params = setup
+    fam = engine.SignatureFamily((256,))
+    eng = SceneEngine(cfg, params, batch=2, family=fam)
+    ok = eng.submit(SceneRequest(0, _scene_with(50, 100)))
+    big = eng.submit(SceneRequest(1, _scene_with(51, 500)))
+    assert big.status == SHED and big.request.shed_reason == "capacity"
+    eng.serve()
+    assert ok.result().logits is not None
+    with pytest.raises(RequestShedError, match="capacity"):
+        big.result()
+    assert eng.slo_stats()["shed_by_reason"] == {"capacity": 1}
+    eng.close()
+
+
+def test_bucketed_async_matches_sync_bitwise(setup):
+    cfg, params = setup
+    fam = engine.SignatureFamily((256, CAP))
+
+    def serve(sync):
+        eng = SceneEngine(cfg, params, batch=2, family=fam,
+                          policy=AdmissionPolicy(), sync=sync, depth=2,
+                          planner_threads=2)
+        handles = eng.submit(
+            [SceneRequest(i, _scene_with(60 + i, 100 + 90 * i))
+             for i in range(5)])
+        eng.serve()
+        out = {h.request.rid: h.result().logits for h in handles}
+        eng.close()
+        return out
+
+    by_sync, by_async = serve(True), serve(False)
+    for rid in by_sync:
+        np.testing.assert_array_equal(by_sync[rid], by_async[rid])
+
+
+def test_build_signature_family_pins_specs(setup):
+    cfg, _ = setup
+    scenes = [_scene_with(70 + i, n) for i, n in
+              enumerate([100, 120, 140, 560, 600])]
+    fam = engine.build_signature_family(scenes, cfg, max_buckets=2,
+                                        quantum=64, mem_budget=16 * 1024)
+    assert 1 <= fam.n_buckets <= 2
+    assert fam.max_capacity >= 600
+    for cap in fam.capacities:
+        assert fam.spec_for(cap) is not None  # pinned per-bucket spec
+
+
+# ---------------------------------------------------------------------------
+# handle API + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_handle_result_drives_engine_and_status_flows(setup):
+    cfg, params = setup
+    eng = SceneEngine(cfg, params, batch=2)
+    h = eng.submit(SceneRequest(0, _scene_with(80, 200)))
+    assert h.status == QUEUED and not h.done()
+    r = h.result()  # no active run: result() pumps the queue itself
+    assert r is h.request and h.done() and h.status == COMPLETED
+    assert r.latency_ms is not None and r.latency_ms >= 0.0
+    assert r.logits is not None
+    eng.close()
+
+
+def test_deprecated_run_and_completed_shims(setup):
+    cfg, params = setup
+    eng = SceneEngine(cfg, params, batch=2)
+    eng.submit([SceneRequest(i, _scene_with(90 + i, 200)) for i in range(2)])
+    with pytest.warns(DeprecationWarning, match="deprecated in repro.serving"):
+        done = eng.run()
+    assert len(done) == 2
+    with pytest.warns(DeprecationWarning, match="deprecated in repro.serving"):
+        assert eng.completed == done
+    eng.close()

@@ -128,25 +128,27 @@ def test_scene_engine_serves_batches_with_one_compilation():
     assert any(d.backend == engine.SSPNNA for d in spec.levels)
     eng = SceneEngine(cfg, params, batch=4, spec=spec, use_kernel=False)
     scenes = [_scene(200 + i) for i in range(6)]
-    eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes[:4])])
-    eng.run()
-    eng.submit([SceneRequest(4 + i, s) for i, s in enumerate(scenes[4:])])
-    eng.run()  # short wave: exercises padding
+    handles = eng.submit([SceneRequest(i, s)
+                          for i, s in enumerate(scenes[:4])])
+    eng.serve()
+    handles += eng.submit([SceneRequest(4 + i, s)
+                           for i, s in enumerate(scenes[4:])])
+    eng.serve()  # short wave: exercises padding
     assert eng.n_compilations == 1
-    assert len(eng.completed) == 6
-    for r in eng.completed:
+    assert len(handles) == 6 and all(h.done() for h in handles)
+    for h in handles:
+        r = h.result()
         assert r.logits.shape == (CAP, N_CLASSES)
         assert not np.any(np.isnan(r.logits))
     # batched result == single-scene engine apply off the cached plan
-    r0 = eng.completed[0]
+    r0 = handles[0].result()
     plan0 = eng.cache.get_or_build(r0.scene, cfg, spec=spec)
     single = engine.apply_unet(params, r0.scene.feats, plan0,
                                use_kernel=False)
     np.testing.assert_allclose(r0.logits, np.asarray(single),
                                rtol=1e-5, atol=1e-5)
     # resubmitting a known scene hits the plan cache and the jit cache
-    eng.submit([SceneRequest(99, scenes[0])])
-    eng.run()
+    eng.submit(SceneRequest(99, scenes[0])).result()
     assert eng.cache.hits >= 1 and eng.n_compilations == 1
 
 
@@ -271,8 +273,8 @@ def test_scene_engine_accepts_shared_context(setup):
     e2 = SceneEngine(cfg, params, batch=2, ctx=ctx)
     assert e1.cache is ctx.plan_cache and e2.cache is ctx.plan_cache
     e1.submit([SceneRequest(0, t)])
-    e1.run()
+    e1.serve()
     e2.submit([SceneRequest(1, t)])
-    e2.run()
+    e2.serve()
     assert ctx.plan_cache.hits >= 1  # e2 hit e1's plan
     e1.close(), e2.close()

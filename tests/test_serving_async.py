@@ -34,9 +34,9 @@ def setup():
 
 
 def _serve(eng, scenes):
-    eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
-    eng.run()
-    return {r.rid: r for r in eng.completed}
+    handles = eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    eng.serve()
+    return {h.request.rid: h.result() for h in handles}
 
 
 def test_async_matches_sync_bitwise(setup):
@@ -166,8 +166,8 @@ def test_poisoned_wave_requeues_without_losing_requests(setup, sync):
     reqs[2] = SceneRequest(2, _scene(902, cap=CAP // 2))
     eng.submit(reqs)
     with pytest.raises(Exception):
-        eng.run()
-    done = {r.rid for r in eng.completed}
+        eng.serve()
+    done = {r.rid for r in reqs if r.status == "completed"}
     queued = [r.rid for r in eng.queue]
     # nothing dropped, nothing duplicated, poisoned wave back at the front
     assert sorted(done) + queued == list(range(6))
@@ -176,9 +176,11 @@ def test_poisoned_wave_requeues_without_losing_requests(setup, sync):
     good = [r for r in eng.queue if r.rid != 2]
     eng.queue.clear()
     eng.submit(good)
-    eng.run()
-    assert {r.rid for r in eng.completed} == {0, 1, 3, 4, 5}
-    for r in eng.completed:
+    eng.serve()
+    survivors = [r for r in reqs if r.rid != 2]
+    assert {r.rid for r in survivors if r.status == "completed"} == \
+        {0, 1, 3, 4, 5}
+    for r in survivors:
         assert r.logits is not None and not np.any(np.isnan(r.logits))
 
 
@@ -197,6 +199,30 @@ def test_scheduler_validates_knobs():
     assert sched.run(sync=False) == []
 
 
+def test_close_idempotent_and_drains_inflight_plans(setup):
+    """close() racing an async run waits for the run — draining its
+    planner-thread futures — instead of cancelling them; repeated closes
+    are no-ops and the engine stays usable afterwards."""
+    cfg, params = setup
+    eng = SceneEngine(cfg, params, batch=2, sync=False, depth=2,
+                      planner_threads=2)
+    scenes = [_scene(1100 + i) for i in range(6)]
+    handles = eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    t = threading.Thread(target=eng.serve)
+    t.start()
+    eng.close()  # may land mid-run: must block until the run drains
+    t.join()
+    for h in handles:
+        assert h.done() and h.result().logits is not None
+    eng.close()  # idempotent
+    eng.close()
+    # a later serve lazily recreates the planner pool
+    h2 = eng.submit(SceneRequest(99, _scene(1199)))
+    eng.serve()
+    assert h2.result().logits is not None
+    eng.close()
+
+
 def test_lm_engine_async_matches_sync(rng):
     from repro.configs import get_config
     from repro.models.transformer import init_lm
@@ -210,9 +236,9 @@ def test_lm_engine_async_matches_sync(rng):
     def serve(sync, eos=None):
         eng = Engine(cfg, params, batch=2, prompt_len=16, max_new=4, eos=eos,
                      sync=sync)
-        eng.submit([Request(i, p) for i, p in enumerate(prompts)])
-        eng.run()
-        return {r.rid: r.out for r in eng.completed}
+        handles = eng.submit([Request(i, p) for i, p in enumerate(prompts)])
+        eng.serve()
+        return {h.request.rid: h.result().out for h in handles}
 
     outs_sync, outs_async = serve(True), serve(False)
     assert outs_sync == outs_async

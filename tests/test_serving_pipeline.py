@@ -15,8 +15,9 @@ def test_engine_continuous_batching(rng):
     eng = Engine(cfg, params, batch=2, prompt_len=16, max_new=4)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, 10).astype(np.int32),
                     max_new=4) for i in range(5)]
-    eng.submit(reqs)
-    done = eng.run()
+    handles = eng.submit(reqs)
+    eng.serve()
+    done = [h.result() for h in handles]
     assert len(done) == 5
     for r in done:
         assert len(r.out) >= 1

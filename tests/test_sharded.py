@@ -220,11 +220,11 @@ def test_scene_engine_sharded_guards_signature_and_cache_args(setup):
     ctx = engine.ExecutionContext(mesh=_mesh(4))
     eng = SceneEngine(cfg, params, batch=2, ctx=ctx, layout=layout)
     eng.submit([SceneRequest(0, t)])
-    eng.run()
+    eng.serve()
     small = _scene(5, res=RES, cap=CAP // 2)  # divides 4 shards, wrong V
     eng.submit([SceneRequest(1, small)])
     with pytest.raises(RuntimeError, match="signature diverged"):
-        eng.run()
+        eng.serve()
     assert eng.n_compilations == 1  # no silent second signature
     assert [r.rid for r in eng.queue] == [1]  # requeued, not dropped
     eng.close()
@@ -240,16 +240,16 @@ def test_scene_engine_serves_sharded_waves(setup):
     ctx = engine.ExecutionContext(mesh=_mesh(n_shards))
     eng = SceneEngine(cfg, params, batch=2, ctx=ctx, layout=layout)
     scenes = [_scene(200 + i) for i in range(5)]
-    eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
-    eng.run()
-    assert len(eng.completed) == 5 and eng.n_compilations == 1
+    handles = eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    eng.serve()
+    assert all(h.done() for h in handles) and eng.n_compilations == 1
     # per-shard plan builds are observable in the scheduler stats
     for st_ in eng.wave_stats:
         assert st_.notes["plan_shards"] == n_shards
         assert st_.notes["plan_builds"] == len(st_.rids)
         assert st_.notes["halo_rows"] > 0
     # wave results == direct sharded apply off the same plan
-    r0 = eng.completed[0]
+    r0 = handles[0].result()
     plan0 = eng.cache.get_or_build(
         r0.scene, cfg, topology=ctx.topology_key(),
         builder=engine.build_sharded_scene_plan_host, layout=layout)
@@ -258,7 +258,6 @@ def test_scene_engine_serves_sharded_waves(setup):
             params, r0.scene.feats, plan0)
     np.testing.assert_array_equal(r0.logits, np.asarray(direct))
     # resubmitting a known scene hits the plan cache
-    eng.submit([SceneRequest(99, scenes[0])])
-    eng.run()
+    eng.submit(SceneRequest(99, scenes[0])).result()
     assert eng.cache.hits >= 1 and eng.n_compilations == 1
     eng.close()
