@@ -1,0 +1,135 @@
+"""Incremental stream planning vs from-scratch: per-frame host plan cost.
+
+Measures the streaming scene engine's core claim: for a LiDAR sweep whose
+consecutive frames share most of their voxels, patching the previous
+frame's host plan (``engine.plan.StreamPlanState`` over
+``core.host_meta.StreamMetaState``) beats rebuilding it from scratch
+(``build_scene_plan_host``) by a widening margin as overlap grows.
+
+Each sweep configuration targets one steady-state voxel-overlap regime
+(0.5 .. 0.98) via the synthetic sweep generator's ego-step and churn
+knobs. Per frame both paths run on the *same* canonical-layout frame and
+the patched plan is asserted bitwise-equal to the from-scratch one before
+any number is reported — a fast-but-wrong patch cannot publish a row.
+
+Rows:
+
+* ``stream_plan_<cfg>`` — steady-state (frame 0's rebuild excluded) mean
+  incremental plan time per frame; ``derived`` reports the realized
+  overlap, the from-scratch mean and the speedup.
+* ``stream_amortize_<cfg>`` — whole-sweep view including frame 0's full
+  rebuild: cumulative speedup and the frame index where the incremental
+  path's cumulative cost drops below from-scratch (break-even).
+
+Standalone CLI (what the CI smoke job runs):
+
+    python -m benchmarks.bench_streaming --quick --json BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standalone_bench_main
+from repro.data.scenes import N_CLASSES, make_lidar_sweep
+from repro.engine.plan import StreamPlanState, build_scene_plan_host
+from repro.models.scn import UNetConfig
+from repro.sparse.tensor import PAD_COORD, SparseVoxelTensor
+
+# (name, ego step, churn) -> targeted steady-state voxel overlap regime
+SWEEPS = (
+    ("ovl98", 0, 0.01),
+    ("ovl93", 4, 0.00),
+    ("ovl85", 4, 0.04),
+    ("ovl75", 4, 0.12),
+    ("ovl60", 8, 0.20),
+    ("ovl50", 8, 0.32),
+)
+
+
+def _assert_plans_equal(a, b, ctx):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"plan treedefs diverged at {ctx}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"plan leaf {i} at {ctx}")
+
+
+def _pack(coords, feats, mask, frame_rows, cap):
+    act = np.flatnonzero(mask)
+    pc = np.full((cap, 3), PAD_COORD, np.int32)
+    pf = np.zeros_like(feats)
+    pm = np.zeros(cap, bool)
+    pc[frame_rows[act]] = coords[act]
+    pf[frame_rows[act]] = feats[act]
+    pm[frame_rows[act]] = True
+    return SparseVoxelTensor(pc, pf, pm)
+
+
+def _sweep_case(name, step, churn, *, res, cap, n_frames, cfg, verify):
+    frames, shifts = make_lidar_sweep(17, n_frames, resolution=res,
+                                      capacity=cap, step=step, churn=churn)
+    state = StreamPlanState(cfg, min_overlap=0.25, stream_id=f"bench-{name}")
+    inc_ms, full_ms, overlaps = [], [], []
+    for fno, ((c, f, _, m), shift) in enumerate(zip(frames, shifts)):
+        t = SparseVoxelTensor(c, f.astype(np.float32), m)
+        _, plan, frame_rows, info = state.plan_frame(t, fno, shift)
+        packed = _pack(c, f.astype(np.float32), m, frame_rows, cap)
+        t0 = time.perf_counter()
+        want = build_scene_plan_host(packed, cfg, spec=None,
+                                     plan_tiles=False)
+        full_ms.append((time.perf_counter() - t0) * 1e3)
+        inc_ms.append(info["plan_ms"])
+        overlaps.append(info["overlap"])
+        if verify:
+            _assert_plans_equal(plan, want, f"{name} frame {fno}")
+    # steady state: frame 0 is a rebuild by construction
+    inc = float(np.mean(inc_ms[1:]))
+    full = float(np.mean(full_ms[1:]))
+    ovl = float(np.mean(overlaps[1:]))
+    modes = state.counts
+    emit(f"stream_plan_{name}", inc * 1e3,
+         f"overlap={ovl:.3f} full_us={full * 1e3:.1f} "
+         f"speedup={full / inc:.2f}x patched={modes['patched']} "
+         f"rebuilt={modes['rebuilt']} frames={n_frames}")
+    cum_inc = np.cumsum(inc_ms)
+    cum_full = np.cumsum(full_ms)
+    ahead = np.flatnonzero(cum_inc < cum_full)
+    breakeven = int(ahead[0]) if len(ahead) else -1
+    emit(f"stream_amortize_{name}", float(cum_inc[-1]) * 1e3,
+         f"cum_speedup={float(cum_full[-1] / cum_inc[-1]):.2f}x "
+         f"breakeven_frame={breakeven} cum_full_us={cum_full[-1] * 1e3:.1f}")
+    return ovl, full / inc
+
+
+def run(quick: bool = False) -> None:
+    if quick:
+        res, cap, n_frames = 32, 2048, 6
+    else:
+        res, cap, n_frames = 64, 8192, 12
+    cfg = UNetConfig(widths=(16, 32, 32), reps=1, resolution=res,
+                     capacity=cap, n_classes=N_CLASSES)
+    results = [
+        _sweep_case(name, step, churn, res=res, cap=cap, n_frames=n_frames,
+                    cfg=cfg, verify=True)
+        for name, step, churn in SWEEPS
+    ]
+    hi = [(o, s) for o, s in results if o >= 0.85]
+    if hi:
+        emit("stream_speedup_hi_overlap", 0.0,
+             f"min_speedup={min(s for _, s in hi):.2f}x over "
+             f"{len(hi)} configs with overlap>=0.85")
+
+
+def main(argv=None) -> None:
+    standalone_bench_main(
+        run, "bench_streaming",
+        quick_help="small sweep (res=32, cap=2048, 6 frames) for CI",
+        description=__doc__, argv=argv)
+
+
+if __name__ == "__main__":
+    main()

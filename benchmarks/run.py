@@ -17,10 +17,11 @@ import sys
 import time
 
 # modules cheap enough for the CI smoke job (reduced configs, small scenes).
-# bench_serving, bench_admission, bench_sspnna and bench_sharded_scene are
-# smoked separately (their own --quick CLIs write BENCH_serving.json /
-# BENCH_admission.json / BENCH_sspnna.json / BENCH_sharded_scene.json) so
-# they aren't duplicated here.
+# bench_serving, bench_admission, bench_sspnna, bench_sharded_scene and
+# bench_streaming are smoked separately (their own --quick CLIs write
+# BENCH_serving.json / BENCH_admission.json / BENCH_sspnna.json /
+# BENCH_sharded_scene.json / BENCH_streaming.json) so they aren't
+# duplicated here.
 QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
          "bench_dataflow")
 
@@ -48,11 +49,13 @@ def main(argv=None) -> None:
         bench_soar,
         bench_spade_attrs,
         bench_sspnna,
+        bench_streaming,
     )
 
     modules = [bench_dispatch, bench_coir, bench_soar, bench_spade_attrs,
                bench_dataflow, bench_sspnna, bench_scn, bench_serving,
-               bench_admission, bench_sharded_scene, bench_moe, bench_lm]
+               bench_admission, bench_sharded_scene, bench_streaming,
+               bench_moe, bench_lm]
     if args.only:
         wanted = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in modules}

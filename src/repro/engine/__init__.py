@@ -40,6 +40,7 @@ from repro.engine.plan import (
     PlanSpec,
     ScenePlan,
     SignatureFamily,
+    StreamPlanState,
     TileArrays,
     build_plan_spec,
     build_signature_family,
@@ -90,6 +91,7 @@ __all__ = [
     "ShardLayout",
     "ShardedScenePlan",
     "SignatureFamily",
+    "StreamPlanState",
     "TileArrays",
     "apply_unet",
     "apply_unet_sharded",

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -35,6 +36,7 @@ from repro.core import spade
 from repro.core.coir import COIR
 from repro.core.hashgrid import kernel_offsets
 from repro.core.host_meta import (
+    StreamMetaState,
     build_cirf_np,
     downsample_coords_np,
     transposed_coir_np,
@@ -287,10 +289,20 @@ class PlanCache:
     If a build raises, the key is released and every waiter retries the
     build itself (raising the same error for deterministic failures) — a
     poisoned scene never wedges the cache.
+
+    ``max_entries`` bounds the number of cached entries with LRU eviction
+    (host *and* memoized device copies go together, so a long-running
+    stream whose geometry drifts — every frame a fresh key — cannot leak
+    plan entries without bound). It defaults to ``capacity`` so existing
+    behavior is unchanged; pass a smaller value to tighten memory.
     """
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128, *,
+                 max_entries: int | None = None):
         self.capacity = capacity
+        self.max_entries = capacity if max_entries is None else int(max_entries)
+        if self.max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._plans: OrderedDict[str, dict] = OrderedDict()
         self._building: dict[str, threading.Event] = {}
         self._lock = threading.Lock()
@@ -365,7 +377,7 @@ class PlanCache:
         with self._lock:
             self.misses += 1
             self._plans[key] = entry
-            while len(self._plans) > self.capacity:
+            while len(self._plans) > self.max_entries:
                 self._plans.popitem(last=False)
             self._building.pop(key, None)
             ev.set()
@@ -387,7 +399,7 @@ class PlanCache:
                 entry = {"host": host_plan, "device": None,
                          "dev_lock": threading.Lock()}
                 self._plans[key] = entry
-                while len(self._plans) > self.capacity:
+                while len(self._plans) > self.max_entries:
                     self._plans.popitem(last=False)
         return self._resolve(entry, device)
 
@@ -662,40 +674,249 @@ def _build_scene_plan(
             down = ConvPlan(down_coir)
             up = ConvPlan(up_coir)
 
-        n_active = int(np.asarray(mask).sum())
-        info: dict = {"level": li, "n_active": n_active}
-        dispatch = REFERENCE_DISPATCH
-        tiles = None
-        if plan_tiles and n_active > 0:
-            if spec is not None:
-                dispatch = spec.levels[li]
-            else:
-                ordering = _order_rows(sub_coir, coords, mask, order, soar_chunk)
-                attrs = spade.extract_attributes(
-                    np.asarray(sub_coir.indices), np.asarray(mask), ordering)
-                layer = _layer_spec(f"level{li}", n_active, cfg.widths[li])
-                df = spade.explore(layer, {"CIRF": attrs, "CORF": attrs},
-                                   mem_budget)
-                dispatch = dispatch_from_dataflow(df, attrs, n_active)
-                info["arf"] = float(attrs.arf_avg[0])
-                info["da_elems"] = df.da_elems
-            if dispatch.backend == SSPNNA:
-                if spec is not None:
-                    ordering = _order_rows(sub_coir, coords, mask, order,
-                                           soar_chunk)
-                tiles = _tile_arrays(sub_coir.indices, ordering, dispatch,
-                                     int(np.asarray(mask).shape[0]))
-                if tiles is None:  # tile budget overflow: coarse dispatch
-                    info["tile_overflow"] = True
-                    dispatch = REFERENCE_DISPATCH
-                elif not dispatch.n_tiles:
-                    # adaptive mode: record the realized tile count
-                    dispatch = Dispatch(
-                        dispatch.backend, dispatch.flavor, dispatch.walk,
-                        dispatch.delta_o, dispatch.delta_i,
-                        int(tiles.out_rows.shape[0]), dispatch.block_n)
-        info["dispatch"] = dispatch
+        sub, info = _assemble_level(
+            sub_coir, coords, mask, li, cfg, spec=spec, plan_tiles=plan_tiles,
+            mem_budget=mem_budget, order=order, soar_chunk=soar_chunk)
         stats.append(info)
-        levels.append(LevelPlan(coords, mask, ConvPlan(sub_coir, tiles, dispatch),
-                                down, up))
+        levels.append(LevelPlan(coords, mask, sub, down, up))
     return ScenePlan(tuple(levels), stats)
+
+
+def _assemble_level(
+    sub_coir: COIR,
+    coords,
+    mask,
+    li: int,
+    cfg,
+    *,
+    spec: PlanSpec | None,
+    plan_tiles: bool,
+    mem_budget: int,
+    order: str,
+    soar_chunk: int,
+) -> tuple[ConvPlan, dict]:
+    """Dispatch/ordering/tile assembly for one level's submanifold conv.
+
+    Deterministic in ``(sub_coir, coords, mask)`` — the streaming planner
+    relies on this: running it on a patched (bitwise-equal) COIR yields
+    bitwise-equal orderings, tiles and dispatch decisions.
+    """
+    n_active = int(np.asarray(mask).sum())
+    info: dict = {"level": li, "n_active": n_active}
+    dispatch = REFERENCE_DISPATCH
+    tiles = None
+    if plan_tiles and n_active > 0:
+        if spec is not None:
+            dispatch = spec.levels[li]
+        else:
+            ordering = _order_rows(sub_coir, coords, mask, order, soar_chunk)
+            attrs = spade.extract_attributes(
+                np.asarray(sub_coir.indices), np.asarray(mask), ordering)
+            layer = _layer_spec(f"level{li}", n_active, cfg.widths[li])
+            df = spade.explore(layer, {"CIRF": attrs, "CORF": attrs},
+                               mem_budget)
+            dispatch = dispatch_from_dataflow(df, attrs, n_active)
+            info["arf"] = float(attrs.arf_avg[0])
+            info["da_elems"] = df.da_elems
+        if dispatch.backend == SSPNNA:
+            if spec is not None:
+                ordering = _order_rows(sub_coir, coords, mask, order,
+                                       soar_chunk)
+            tiles = _tile_arrays(sub_coir.indices, ordering, dispatch,
+                                 int(np.asarray(mask).shape[0]))
+            if tiles is None:  # tile budget overflow: coarse dispatch
+                info["tile_overflow"] = True
+                dispatch = REFERENCE_DISPATCH
+            elif not dispatch.n_tiles:
+                # adaptive mode: record the realized tile count
+                dispatch = Dispatch(
+                    dispatch.backend, dispatch.flavor, dispatch.walk,
+                    dispatch.delta_o, dispatch.delta_i,
+                    int(tiles.out_rows.shape[0]), dispatch.block_n)
+    info["dispatch"] = dispatch
+    return ConvPlan(sub_coir, tiles, dispatch), info
+
+
+# ---------------------------------------------------------------------------
+# Streaming plans
+# ---------------------------------------------------------------------------
+
+class StreamPlanState:
+    """Per-stream incremental planner: cached host plan + device buffers.
+
+    One instance per LiDAR stream. ``plan_frame`` diffs each frame against
+    the stream's cached previous frame (``core.host_meta.StreamMetaState``),
+    patches the host plan's metadata tables instead of rebuilding them, and
+    reuses the previous frame's ``ConvPlan`` objects outright for levels the
+    delta did not touch (a pure ego shift leaves the whole row graph — and
+    therefore SOAR orderings and tile tables — intact). Every frame's host
+    plan is also registered in the shared :class:`PlanCache` under a
+    version key (``stream|<id>|...|f<frame_no>``) so stream plans live under
+    the same LRU budget as batch plans.
+
+    Frames must be planned in order; ``plan_frame`` blocks until the
+    previous frame of this stream has been planned. If the wait exceeds
+    ``wait_s`` (a predecessor was shed or errored), the frame is planned as
+    a full rebuild so a lost frame can never wedge the stream.
+
+    ``device_plan`` memoizes uploads per leaf *identity*: unchanged tables
+    keep their device buffers across frames, so a steady-state patched
+    frame uploads only the arrays that actually changed. It is not
+    thread-safe — call it from a single dispatch thread (as
+    ``serving.scene_engine`` does).
+    """
+
+    def __init__(self, cfg, *, cache: PlanCache | None = None,
+                 spec: PlanSpec | None = None,
+                 plan_tiles: bool | None = None,
+                 mem_budget: int = 64 * 1024, order: str = "soar",
+                 soar_chunk: int = 512, min_overlap: float = 0.5,
+                 stream_id: str | None = None, topology: str | None = None,
+                 wait_s: float = 5.0):
+        self.cfg = cfg
+        self.cache = cache if cache is not None else PlanCache()
+        self.spec = spec
+        self.plan_tiles = (spec is not None) if plan_tiles is None \
+            else bool(plan_tiles)
+        self.mem_budget = mem_budget
+        self.order = order
+        self.soar_chunk = soar_chunk
+        self.min_overlap = float(min_overlap)
+        self.wait_s = float(wait_s)
+        self.stream_id = stream_id if stream_id is not None \
+            else f"s{id(self):x}"
+        self._tag = (f"stream|{self.stream_id}|v{_PLAN_VERSION}"
+                     f"|top={topology}|{cfg!r}|spec={spec is not None}"
+                     f"|tiles={self.plan_tiles}|{order}|{soar_chunk}")
+        self.meta = StreamMetaState(cfg.resolution, cfg.capacity,
+                                    len(cfg.widths))
+        self._cond = threading.Condition()
+        self._next_frame = 0
+        self._gap = False
+        self._prev_plan: ScenePlan | None = None
+        self._memo: dict = {}
+        self.counts = {"reused": 0, "patched": 0, "rebuilt": 0}
+        self._overlap_sum = 0.0
+        self._plan_ms_sum = 0.0
+
+    # -- planning ----------------------------------------------------------
+
+    def plan_frame(self, t: SparseVoxelTensor, frame_no: int,
+                   ego_shift=(0, 0, 0)) -> tuple[str, ScenePlan, np.ndarray,
+                                                 dict]:
+        """Plan one stream frame; returns ``(key, host_plan, frame_rows,
+        info)``. ``frame_rows`` maps the caller's rows into the stream's
+        canonical layout (feed it to ``pack_stream_frame_np`` for features
+        and to scatter per-row results back out)."""
+        with self._cond:
+            deadline = time.monotonic() + self.wait_s
+            while self._next_frame < frame_no:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+            try:
+                t0 = time.perf_counter()
+                if self._next_frame != frame_no or self._gap:
+                    # gap in the stream (shed/failed predecessor, or an
+                    # out-of-order replay): the cached delta base is stale
+                    self.meta.n = None
+                self._gap = False
+                meta = self.meta.step(np.asarray(t.coords),
+                                      np.asarray(t.mask), ego_shift,
+                                      min_overlap=self.min_overlap)
+                plan = self._assemble(meta)
+                plan_ms = (time.perf_counter() - t0) * 1e3
+                self._prev_plan = plan
+                self.counts[meta.mode] += 1
+                self._overlap_sum += meta.overlap
+                self._plan_ms_sum += plan_ms
+                key = f"{self._tag}|f{frame_no}"
+                self.cache.adopt(key, plan, device=False)
+                info = {"mode": meta.mode, "overlap": meta.overlap,
+                        "plan_ms": plan_ms,
+                        "n_active": meta.info.get("n_active")}
+                if "fallback" in meta.info:
+                    info["fallback"] = meta.info["fallback"]
+                return key, plan, meta.frame_rows, info
+            finally:
+                self._next_frame = max(self._next_frame, frame_no + 1)
+                self._cond.notify_all()
+
+    def skip_frame(self, frame_no: int) -> None:
+        """Mark a shed/failed frame so its successors stop waiting for it.
+
+        The serving layer calls this when admission sheds a stream frame
+        (deadline/overload): the next planned frame rebuilds from scratch
+        — its delta base, and the reference point of the caller's
+        ``ego_shift``, is the frame that never arrived."""
+        with self._cond:
+            if frame_no >= self._next_frame:
+                self._gap = True
+                self._next_frame = frame_no + 1
+                self._cond.notify_all()
+
+    def _assemble(self, meta) -> ScenePlan:
+        prev = self._prev_plan
+        if meta.mode == "reused" and prev is not None:
+            return prev
+        n_levels = self.meta.n_levels
+        levels: list[LevelPlan] = []
+        stats: list[dict] = []
+        for li in range(n_levels):
+            coords, mask, sub_coir = meta.levels[li]
+            if prev is not None and not meta.changed[li]:
+                # untouched level: identical tables => identical ordering,
+                # tiles and dispatch; reuse the ConvPlan object wholesale
+                sub = prev.levels[li].sub
+                info = dict(prev.stats[li]) if prev.stats else {"level": li}
+            else:
+                sub, info = _assemble_level(
+                    sub_coir, coords, mask, li, self.cfg, spec=self.spec,
+                    plan_tiles=self.plan_tiles, mem_budget=self.mem_budget,
+                    order=self.order, soar_chunk=self.soar_chunk)
+            down = up = None
+            if li < n_levels - 1:
+                if prev is not None and not meta.pair_changed[li]:
+                    down = prev.levels[li].down
+                    up = prev.levels[li].up
+                else:
+                    down_coir, up_coir = meta.pairs[li]
+                    down = ConvPlan(down_coir)
+                    up = ConvPlan(up_coir)
+            levels.append(LevelPlan(coords, mask, sub, down, up))
+            stats.append(info)
+        return ScenePlan(tuple(levels), stats)
+
+    # -- device upload with per-leaf memoization ---------------------------
+
+    def device_plan(self, host_plan: ScenePlan) -> ScenePlan:
+        """Upload a stream host plan, reusing device buffers for leaves
+        that are the *same array object* as the previous frame's (patched
+        frames share every untouched table). Single-threaded by contract."""
+        new_memo: dict = {}
+        old_memo = self._memo
+
+        def convert(x):
+            k = id(x)
+            hit = old_memo.get(k)
+            if hit is None or hit[0] is not x:
+                hit = (x, jnp.asarray(x))
+            new_memo[k] = hit
+            return hit[1]
+
+        out = jax.tree.map(convert, host_plan)
+        self._memo = new_memo
+        return ScenePlan(out.levels, host_plan.stats)
+
+    # -- stats -------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Aggregate per-stream reuse counters (for ``WaveStats.notes``)."""
+        frames = sum(self.counts.values())
+        return {
+            "frames": frames,
+            **self.counts,
+            "mean_overlap": self._overlap_sum / max(frames, 1),
+            "mean_plan_ms": self._plan_ms_sum / max(frames, 1),
+        }

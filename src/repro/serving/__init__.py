@@ -24,6 +24,19 @@ from repro.serving.api import (
 )
 from repro.serving.scheduler import WaveScheduler, WaveStats
 
+# scene-engine surface (incl. the streaming API) is re-exported lazily so
+# `import repro.serving` stays light (no jax import on the fast path)
+_SCENE_ENGINE_NAMES = (
+    "SceneEngine", "SceneRequest", "StreamFrameRequest", "StreamHandle")
+
+
+def __getattr__(name: str):
+    if name in _SCENE_ENGINE_NAMES:
+        from repro.serving import scene_engine
+        return getattr(scene_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "COMPLETED",
     "QUEUED",
@@ -32,8 +45,12 @@ __all__ = [
     "AdmissionPolicy",
     "RequestHandle",
     "RequestShedError",
+    "SceneEngine",
+    "SceneRequest",
     "ServeRequest",
     "ServingBase",
+    "StreamFrameRequest",
+    "StreamHandle",
     "WaveScheduler",
     "WaveStats",
 ]

@@ -34,6 +34,18 @@ Three serving modes:
   Each wave's ``WaveStats.notes`` records the per-shard plan builds and
   halo rows.
 
+On top of the batched mode, ``open_stream()`` / ``serve_stream()`` add a
+**streaming** path for LiDAR sweeps: frames submitted through a
+:class:`StreamHandle` are planned *incrementally* — each frame diffs
+against the stream's previous frame (after ego-motion re-basing) and
+patches the cached host plan's metadata tables instead of rebuilding
+them, with a full-rebuild fallback under heavy churn. Admission keeps
+frames FIFO within a stream (they are order-dependent) while the policy
+still arbitrates between streams and one-shot requests; each wave's
+``WaveStats.notes`` reports ``stream_reused`` / ``stream_patched`` /
+``stream_rebuilt`` counts, mean ``stream_overlap`` and summed
+``stream_plan_ms``.
+
 Stage split (the paper's offline-pass/execution overlap, served):
 
 * **plan** — ``PlanCache.get_or_build(device=False)``: the AdMAC + SOAR +
@@ -60,15 +72,22 @@ shims there.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.host_meta import pack_stream_frame_np
 from repro.engine import api as engine_api
 from repro.engine.context import ExecutionContext
-from repro.engine.plan import PlanCache, PlanSpec, SignatureFamily
+from repro.engine.plan import (
+    PlanCache,
+    PlanSpec,
+    SignatureFamily,
+    StreamPlanState,
+)
 from repro.engine.shard import ShardLayout, build_sharded_scene_plan_host
 from repro.serving.api import AdmissionPolicy, ServeRequest, ServingBase
 from repro.serving.scheduler import WaveScheduler
@@ -84,6 +103,72 @@ class SceneRequest(ServeRequest):
     logits: np.ndarray | None = None   # (capacity, n_classes)
     pred: np.ndarray | None = None     # (capacity,) argmax classes
     done: bool = False
+
+
+@dataclass
+class StreamFrameRequest(SceneRequest):
+    """One frame of an open LiDAR stream (made by ``StreamHandle.submit``).
+
+    Carries the stream handle, its monotonically assigned ``frame_no`` and
+    the ``ego_shift`` from the previous frame. After serving, ``logits`` /
+    ``pred`` are in the *caller's* row layout (the drain stage scatters the
+    stream's canonical rows back through ``frame_rows``), and
+    ``plan_info`` records how the frame was planned: ``mode`` in
+    {``reused``, ``patched``, ``rebuilt``}, voxel ``overlap`` fraction with
+    the previous frame, host ``plan_ms``."""
+
+    stream: "StreamHandle | None" = None
+    frame_no: int = -1
+    ego_shift: tuple = (0, 0, 0)
+    plan_info: dict | None = None
+
+    # scheduler hooks: per-stream FIFO admission keys
+    @property
+    def _stream_key(self):
+        return None if self.stream is None else self.stream.stream_id
+
+    @property
+    def _stream_frame(self) -> int:
+        return self.frame_no
+
+
+class StreamHandle:
+    """Client view of one open stream on a :class:`SceneEngine`.
+
+    ``submit(scene, ego_shift)`` queues the stream's next frame (frame
+    numbers are assigned monotonically; admission keeps them FIFO within
+    the stream even under an urgency policy) and returns the usual
+    :class:`~repro.serving.api.RequestHandle`. ``stats()`` reports the
+    stream's plan-reuse counters."""
+
+    def __init__(self, engine: "SceneEngine", state: StreamPlanState):
+        self.engine = engine
+        self.state = state
+        self._next_frame = 0
+        self._lock = threading.Lock()
+
+    @property
+    def stream_id(self) -> str:
+        return self.state.stream_id
+
+    def submit(self, scene: SparseVoxelTensor, ego_shift=(0, 0, 0), *,
+               rid: int | None = None, **slo):
+        """Queue the next frame of this stream; ``ego_shift`` is the ego
+        translation (in voxels) since the *previous* submitted frame.
+        SLO kwargs (tenant/priority/deadline_ms) pass through."""
+        with self._lock:
+            frame_no = self._next_frame
+            self._next_frame += 1
+        req = StreamFrameRequest(
+            rid=frame_no if rid is None else rid, scene=scene,
+            stream=self, frame_no=frame_no, ego_shift=tuple(ego_shift),
+            **slo)
+        return self.engine.submit(req)
+
+    def stats(self) -> dict:
+        """Aggregate plan-reuse stats: frames, reused/patched/rebuilt
+        counts, mean overlap, mean host plan ms."""
+        return self.state.stats()
 
 
 class SceneEngine(ServingBase):
@@ -172,6 +257,7 @@ class SceneEngine(ServingBase):
             self._plan_kw = dict(spec=spec, plan_tiles=spec is not None,
                                  order=order, soar_chunk=soar_chunk)
             self._builder = None  # PlanCache default (build_scene_plan_host)
+        self._streams: dict[str, StreamHandle] = {}
         self.scheduler = WaveScheduler(
             batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
             drain=self._drain_stage,
@@ -181,7 +267,8 @@ class SceneEngine(ServingBase):
                              else planner_threads),
             policy=policy,
             bucket_of=((lambda r: getattr(r, "_bucket", None))
-                       if family is not None else None))
+                       if family is not None else None),
+            on_shed=self._on_shed)
 
         if layout is not None:
             def sharded_apply(params, feats, plan):
@@ -216,6 +303,66 @@ class SceneEngine(ServingBase):
         cache_size = getattr(self._apply, "_cache_size", None)
         return int(cache_size()) if cache_size is not None else -1
 
+    # -- streaming -----------------------------------------------------------
+
+    def open_stream(self, stream_id: str | None = None, *,
+                    min_overlap: float = 0.5,
+                    wait_s: float = 5.0) -> StreamHandle:
+        """Open a LiDAR stream: subsequent frames submitted through the
+        returned :class:`StreamHandle` are planned *incrementally* — each
+        frame diffs against the previous one (after ``ego_shift``
+        re-basing) and patches the cached host plan instead of rebuilding
+        it, falling back to a full rebuild when voxel overlap drops below
+        ``min_overlap``. Streams need the fixed-capacity batched mode
+        (``family=`` re-packs rows per bucket and ``layout=`` pins a
+        sharded signature; both are incompatible with a per-stream
+        canonical row layout)."""
+        if self.family is not None or self.layout is not None:
+            raise ValueError(
+                "open_stream needs the fixed-capacity batched mode; "
+                "family= and layout= engines cannot serve streams")
+        if stream_id is not None and stream_id in self._streams:
+            raise ValueError(f"stream {stream_id!r} is already open")
+        state = StreamPlanState(
+            self.cfg, cache=self.cache, spec=self.spec,
+            plan_tiles=self._plan_kw["plan_tiles"],
+            order=self._plan_kw["order"],
+            soar_chunk=self._plan_kw["soar_chunk"],
+            min_overlap=min_overlap, stream_id=stream_id,
+            topology=self._topology, wait_s=wait_s)
+        handle = StreamHandle(self, state)
+        self._streams[state.stream_id] = handle
+        return handle
+
+    def serve_stream(self, frames, ego_shifts=None, *,
+                     stream: StreamHandle | None = None,
+                     min_overlap: float = 0.5,
+                     **slo) -> list[StreamFrameRequest]:
+        """Serve a whole sweep through one stream: submit every frame in
+        order (``ego_shifts[i]`` is frame *i*'s ego translation since
+        frame *i−1*), pump the queue, and return the fulfilled requests.
+        Pass ``stream=`` to continue an already-open stream; otherwise a
+        fresh one is opened with ``min_overlap``."""
+        frames = list(frames)
+        if ego_shifts is None:
+            ego_shifts = [(0, 0, 0)] * len(frames)
+        ego_shifts = [tuple(s) for s in ego_shifts]
+        if len(ego_shifts) != len(frames):
+            raise ValueError(
+                f"{len(frames)} frames but {len(ego_shifts)} ego_shifts")
+        if stream is None:
+            stream = self.open_stream(min_overlap=min_overlap)
+        handles = [stream.submit(t, shift, **slo)
+                   for t, shift in zip(frames, ego_shifts)]
+        self.serve()
+        return [h.result() for h in handles]
+
+    def _on_shed(self, req) -> None:
+        # a shed stream frame must not wedge its successors: advance the
+        # stream's frame gate (the next planned frame rebuilds)
+        if isinstance(req, StreamFrameRequest) and req.stream is not None:
+            req.stream.state.skip_frame(req.frame_no)
+
     # -- admission -----------------------------------------------------------
 
     def _prepare(self, req: SceneRequest) -> str | None:
@@ -240,7 +387,22 @@ class SceneEngine(ServingBase):
         The payload carries the cache key so the dispatch thread never
         re-hashes the scene on the critical path. Bucketed mode re-packs
         the scene to its bucket capacity first (active rows in original
-        order) and remembers the row mapping for the drain scatter."""
+        order) and remembers the row mapping for the drain scatter.
+
+        Stream frames take the incremental path: ``StreamPlanState``
+        blocks until the stream's previous frame has been planned, diffs
+        against it, and patches (or reuses) the cached host plan; features
+        are re-packed into the stream's canonical row layout here so
+        dispatch stays a plain upload."""
+        if isinstance(req, StreamFrameRequest):
+            state = req.stream.state
+            key, plan, frame_rows, info = state.plan_frame(
+                req.scene, req.frame_no, req.ego_shift)
+            req.plan_info = info
+            req._frame_rows = frame_rows
+            feats = pack_stream_frame_np(frame_rows,
+                                         np.asarray(req.scene.feats))
+            return "stream", key, plan, feats, state
         if self.family is not None:
             cap = req._bucket
             scene, active_idx = compact_to_capacity(req.scene, cap)
@@ -260,8 +422,13 @@ class SceneEngine(ServingBase):
     def _dispatch_stage(self, reqs: list[SceneRequest], payloads, stats):
         # the plan stage built (and counted) these host plans; adopt fetches
         # the memoized device upload without rebuilding (even if LRU
-        # pressure evicted the entry) and without skewing hits/misses
-        plans = [self.cache.adopt(p[0], p[1], device=True) for p in payloads]
+        # pressure evicted the entry) and without skewing hits/misses.
+        # Stream frames upload through their StreamPlanState's per-leaf
+        # identity memo instead, so a patched frame re-uploads only the
+        # tables the delta actually touched.
+        plans = [p[4].device_plan(p[2]) if p[0] == "stream"
+                 else self.cache.adopt(p[0], p[1], device=True)
+                 for p in payloads]
         if self.layout is not None:
             # the pinned halo budget promises one jit signature across
             # every wave; a diverging plan (wrong capacity, re-pinned
@@ -303,7 +470,19 @@ class SceneEngine(ServingBase):
                     "serving admits one bucket per wave")
             feats = [jnp.asarray(p[2]) for p in payloads]
         else:
-            feats = [r.scene.feats for r in reqs]
+            feats = [jnp.asarray(p[3]) if p[0] == "stream"
+                     else r.scene.feats
+                     for r, p in zip(reqs, payloads)]
+        s_infos = [r.plan_info for r in reqs
+                   if isinstance(r, StreamFrameRequest)]
+        if s_infos:
+            for mode in ("reused", "patched", "rebuilt"):
+                stats.notes[f"stream_{mode}"] = sum(
+                    1 for i in s_infos if i["mode"] == mode)
+            stats.notes["stream_overlap"] = float(
+                sum(i["overlap"] for i in s_infos) / len(s_infos))
+            stats.notes["stream_plan_ms"] = float(
+                sum(i["plan_ms"] for i in s_infos))
         while len(plans) < self.batch:  # pad the wave to fixed batch
             plans.append(plans[0])
             feats.append(jnp.zeros_like(feats[0]))
@@ -315,7 +494,16 @@ class SceneEngine(ServingBase):
         else:
             logits = np.asarray(logits)
         for i, r in enumerate(reqs):
-            if self.family is not None:
+            if isinstance(r, StreamFrameRequest):
+                # scatter the stream's canonical rows back to the
+                # caller's row positions (inactive rows stay zero-logit)
+                fr = r._frame_rows
+                out = np.zeros((r.scene.capacity, logits.shape[-1]),
+                               logits.dtype)
+                act = fr >= 0
+                out[act] = logits[i][fr[act]]
+                r.logits = out
+            elif self.family is not None:
                 # scatter compacted-bucket rows back to the request's
                 # original row positions (padding rows stay zero-logit)
                 idx = r._active_idx

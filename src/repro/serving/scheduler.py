@@ -169,6 +169,7 @@ class WaveScheduler:
         planner_threads: int = 2,
         policy: AdmissionPolicy | None = None,
         bucket_of: Callable | None = None,
+        on_shed: Callable | None = None,
     ):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -183,6 +184,9 @@ class WaveScheduler:
         self.planner_threads = planner_threads
         self.policy = policy
         self.bucket_of = bucket_of
+        #: optional observer called on every shed request (e.g. the scene
+        #: engine unblocks a stream whose frame was shed mid-sequence)
+        self.on_shed = on_shed
         self._plan, self._dispatch, self._drain = plan, dispatch, drain
         self.queue: deque = deque()
         self.completed: list = []
@@ -273,6 +277,8 @@ class WaveScheduler:
             pass
         self._set_status(r, SHED)
         self.shed.append(r)
+        if self.on_shed is not None:
+            self.on_shed(r)
 
     @staticmethod
     def _expired(r, now: float) -> bool:
@@ -302,12 +308,38 @@ class WaveScheduler:
         self._tenant_pass[tenant] = p + 1.0 / pol.weight(tenant)
         self._vt = max(self._vt, p)
 
+    @staticmethod
+    def _stream_heads(avail: list) -> list:
+        """Restrict candidates to each stream's earliest queued frame.
+
+        Stream requests (carrying ``_stream_key`` / ``_stream_frame``) are
+        order-dependent: frame *t+1*'s incremental plan patches frame
+        *t*'s, so admitting frames out of order would stall the plan stage
+        on a frame that hasn't been planned yet. Non-stream requests pass
+        through untouched, and the policy's urgency ordering still picks
+        *between* streams — this only pins the order *within* one."""
+        heads: dict = {}
+        for r in avail:
+            k = getattr(r, "_stream_key", None)
+            if k is None:
+                continue
+            f = getattr(r, "_stream_frame", 0)
+            if k not in heads or f < heads[k]:
+                heads[k] = f
+        if not heads:
+            return avail
+        return [r for r in avail
+                if getattr(r, "_stream_key", None) is None
+                or getattr(r, "_stream_frame", 0) == heads[r._stream_key]]
+
     def _admit(self) -> list:
         """Form the next wave. FIFO without a policy/bucket hook; with one,
         greedy continuous batching: shed expired requests, then fill from
         the most urgent compatible (same-bucket) candidates, preempting
-        stragglers to later waves. May return ``[]`` when shedding emptied
-        the queue — the caller skips the wave without a dispatch."""
+        stragglers to later waves (stream requests are additionally held
+        to per-stream FIFO frame order). May return ``[]`` when shedding
+        emptied the queue — the caller skips the wave without a
+        dispatch."""
         depth0 = len(self.queue)
         if self.policy is None and self.bucket_of is None:
             reqs = [self.queue.popleft()
@@ -331,7 +363,7 @@ class WaveScheduler:
         bucket = None
         avail = list(pending)
         while avail and len(admitted) < self.batch:
-            best = min(avail, key=self._admit_key)
+            best = min(self._stream_heads(avail), key=self._admit_key)
             if not admitted and self.bucket_of is not None:
                 # first pick fixes the wave's signature bucket; everything
                 # incompatible waits for a later wave instead of blocking

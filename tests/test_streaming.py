@@ -1,0 +1,466 @@
+"""Streaming scene engine: incremental plans for LiDAR sweeps.
+
+The contract under test: a *patched* stream plan is bitwise-identical to
+the plan a from-scratch build would produce on the stream's canonical row
+layout — for any churn, any aligned ego shift, across fallbacks (unaligned
+shift, empty frame, sub-threshold overlap). On top sit the serving-layer
+guarantees: per-stream FIFO admission under an urgency policy, shed frames
+never wedging their successors, and plan-reuse stats on ``WaveStats``.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic local shim
+    from _hypothesis_mini import given, settings, strategies as st
+
+from repro.core.hashgrid import UpdatableSortedGrid, kernel_offsets
+from repro.core.host_meta import (
+    StreamMetaState,
+    build_cirf_np,
+    diff_scene_np,
+    downsample_coords_np,
+    linear_key_np,
+    pack_stream_frame_np,
+    transposed_coir_np,
+)
+from repro.data.scenes import N_CLASSES, make_lidar_sweep
+from repro.engine.plan import PlanCache, StreamPlanState, build_scene_plan_host
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving.api import AdmissionPolicy, ServeRequest
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.serving.scheduler import WaveScheduler
+from repro.sparse.tensor import PAD_COORD, SparseVoxelTensor
+
+RES, CAP, LEVELS = 16, 256, 3
+OFFS3 = kernel_offsets(3)
+OFFS2 = kernel_offsets(2, centered=False)
+
+
+# -- helpers ----------------------------------------------------------------
+
+
+def _scratch_pyramid(coords, mask, res, n_levels):
+    """From-scratch reference: geometry + sub/down/up COIRs per level."""
+    geo, c, m, r = [], coords, mask, res
+    for li in range(n_levels):
+        geo.append((c, m, r))
+        if li < n_levels - 1:
+            c, m = downsample_coords_np(c, m, r, 2)
+            r //= 2
+    subs = [build_cirf_np(c, m, c, m, OFFS3, r) for c, m, r in geo]
+    downs, ups = [], []
+    for li in range(n_levels - 1):
+        fc, fm, fr = geo[li]
+        cc, cm, _ = geo[li + 1]
+        downs.append(build_cirf_np(cc, cm, fc, fm, OFFS2, fr, stride=2))
+        ups.append(transposed_coir_np(cc, cm, fc, fm, fr, 2, 2))
+    return geo, subs, downs, ups
+
+
+def _pack_frame(coords, mask, frame_rows, cap):
+    """Re-pack a caller-layout frame into the stream's canonical rows."""
+    act = np.flatnonzero(mask)
+    assert (frame_rows[act] >= 0).all()
+    pc = np.full((cap, 3), PAD_COORD, np.int32)
+    pm = np.zeros(cap, bool)
+    pc[frame_rows[act]] = coords[act]
+    pm[frame_rows[act]] = True
+    return pc, pm
+
+
+def _assert_meta_matches_scratch(meta, st_meta, res, n_levels, ctx=""):
+    cap = st_meta.capacity
+    coords, mask = st_meta.coords[0], st_meta.mask[0]
+    geo, subs, downs, ups = _scratch_pyramid(coords, mask, res, n_levels)
+    for li in range(n_levels):
+        gc, gm, _ = geo[li]
+        sc, sm, scoir = meta.levels[li]
+        np.testing.assert_array_equal(sc, gc, err_msg=f"coords L{li} {ctx}")
+        np.testing.assert_array_equal(sm, gm, err_msg=f"mask L{li} {ctx}")
+        for leaf in ("indices", "bitmask", "mask"):
+            np.testing.assert_array_equal(
+                getattr(scoir, leaf), getattr(subs[li], leaf),
+                err_msg=f"sub.{leaf} L{li} {ctx} mode={meta.mode}")
+    for li in range(n_levels - 1):
+        d, u = meta.pairs[li]
+        for leaf in ("indices", "bitmask", "mask"):
+            np.testing.assert_array_equal(
+                getattr(d, leaf), getattr(downs[li], leaf),
+                err_msg=f"down.{leaf} L{li} {ctx}")
+            np.testing.assert_array_equal(
+                getattr(u, leaf), getattr(ups[li], leaf),
+                err_msg=f"up.{leaf} L{li} {ctx}")
+    assert cap == len(meta.frame_rows)
+
+
+def _assert_plans_equal(a, b, ctx=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"plan treedefs diverged {ctx}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"plan leaf {i} {ctx}")
+
+
+# -- core invariants --------------------------------------------------------
+
+
+def test_kernel_offsets_reciprocal():
+    # the incremental level-0 patch scatters removals/additions into
+    # *neighbours'* rows via k -> 26-k; that needs exact offset negation
+    assert np.array_equal(OFFS3[::-1], -OFFS3)
+
+
+def test_updatable_grid_matches_membership():
+    rng = np.random.default_rng(0)
+    res = 16
+    keys = np.sort(rng.choice(res**3, size=120, replace=False)).astype(np.int32)
+    rows = rng.permutation(120).astype(np.int32)
+    grid = UpdatableSortedGrid(res, keys, rows)
+    table = dict(zip(keys.tolist(), rows.tolist()))
+
+    # delete a third, shift by a uniform key offset, insert fresh keys
+    drop = np.sort(rng.choice(keys, size=40, replace=False))
+    grid.delete(drop)
+    for k in drop.tolist():
+        del table[k]
+    koff = -(4 * res * res)  # ego shift of (-4, 0, 0)
+    table = {k + koff: v for k, v in table.items()
+             if 0 <= k + koff < res**3}
+    oob = np.array([k for k in grid.keys if not 0 <= k + koff < res**3],
+                   np.int32)
+    grid.delete(oob)
+    grid.shift(koff)
+    fresh = np.sort(np.setdiff1d(
+        rng.choice(res**3, size=50, replace=False),
+        np.fromiter(table.keys(), np.int64, len(table)))).astype(np.int32)
+    frows = (1000 + np.arange(len(fresh))).astype(np.int32)
+    grid.insert(fresh, frows)
+    table.update(zip(fresh.tolist(), frows.tolist()))
+
+    q = rng.integers(0, res, (500, 3)).astype(np.int32)
+    got = grid.lookup(q, np.ones(500, bool))
+    want = np.array([table.get(int((c[0] * res + c[1]) * res + c[2]), -1)
+                     for c in q], np.int32)
+    np.testing.assert_array_equal(got, want)
+    assert np.all(np.diff(grid.keys) > 0)  # stays strictly sorted
+
+
+def test_diff_scene_basics():
+    res, cap = 16, 32
+    prev_c = np.full((cap, 3), PAD_COORD, np.int32)
+    prev_m = np.zeros(cap, bool)
+    prev_c[[2, 5, 7]] = [[4, 4, 4], [5, 4, 4], [1, 0, 0]]
+    prev_m[[2, 5, 7]] = True
+    new_c = np.full((cap, 3), PAD_COORD, np.int32)
+    new_m = np.zeros(cap, bool)
+    # after ego shift (1,0,0): (4,4,4)->(3,4,4) retained, (5,4,4)->(4,4,4)
+    # retained, (1,0,0)->(0,0,0) dropped; (9,9,9) appears
+    new_c[[0, 4, 9]] = [[3, 4, 4], [4, 4, 4], [9, 9, 9]]
+    new_m[[0, 4, 9]] = True
+    d = diff_scene_np(prev_c, prev_m, new_c, new_m, res, ego_shift=(1, 0, 0))
+    assert d.n_prev == 3 and d.n_new == 3
+    np.testing.assert_array_equal(np.sort(d.removed_prev_rows), [7])
+    np.testing.assert_array_equal(np.sort(d.added_new_rows), [9])
+    # retained pairs align: same voxel identity on both sides
+    got = {(tuple(new_c[n]), tuple(prev_c[p]))
+           for p, n in zip(d.retained_prev_rows, d.retained_new_rows)}
+    assert got == {((3, 4, 4), (4, 4, 4)), ((4, 4, 4), (5, 4, 4))}
+    assert d.overlap == pytest.approx(2 / 3)
+    # out-of-bounds after re-basing counts as removed
+    d2 = diff_scene_np(prev_c, prev_m, new_c, new_m, res, ego_shift=(2, 0, 0))
+    assert 7 in d2.removed_prev_rows.tolist()
+
+
+# -- bitwise equality: patched vs from-scratch ------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.6), st.integers(0, 2))
+def test_patched_meta_bitwise_under_churn(seed, churn, step_ix):
+    """Property: every patched frame's metadata is bitwise-equal to a
+    from-scratch pyramid built on the canonical packed layout."""
+    step = (0, 4, 8)[step_ix]
+    frames, shifts = make_lidar_sweep(seed % 100_000, 3, resolution=RES,
+                                      capacity=CAP, step=step, churn=churn)
+    state = StreamMetaState(RES, CAP, LEVELS)
+    for t, ((c, _, _, m), shift) in enumerate(zip(frames, shifts)):
+        meta = state.step(c, m, ego_shift=shift)
+        pc, pm = _pack_frame(c, m, meta.frame_rows, CAP)
+        np.testing.assert_array_equal(state.coords[0], pc)
+        np.testing.assert_array_equal(state.mask[0], pm)
+        _assert_meta_matches_scratch(
+            meta, state, RES, LEVELS,
+            ctx=f"t={t} churn={churn:.2f} step={step}")
+
+
+def test_stream_meta_fallbacks():
+    frames, shifts = make_lidar_sweep(3, 2, resolution=RES, capacity=CAP,
+                                      step=4, churn=0.05)
+    (c0, _, _, m0), (c1, _, _, m1) = [(f[0], f[1], f[2], f[3])
+                                      for f in frames]
+    # unaligned ego shift (not divisible by 2^(L-1)) -> full rebuild
+    state = StreamMetaState(RES, CAP, LEVELS)
+    state.step(c0, m0)
+    meta = state.step(c1, m1, ego_shift=(3, 0, 0))
+    assert meta.mode == "rebuilt"
+    assert meta.info["fallback"] == "ego_shift_alignment"
+    _assert_meta_matches_scratch(meta, state, RES, LEVELS, "unaligned")
+
+    # empty frame -> rebuild (and a later non-empty frame recovers)
+    state = StreamMetaState(RES, CAP, LEVELS)
+    state.step(c0, m0)
+    empty_c = np.full((CAP, 3), PAD_COORD, np.int32)
+    meta = state.step(empty_c, np.zeros(CAP, bool))
+    assert meta.mode == "rebuilt" and meta.info["fallback"] == "empty_frame"
+    meta = state.step(c1, m1, ego_shift=(4, 0, 0))
+    assert meta.mode == "rebuilt"  # base was empty
+    _assert_meta_matches_scratch(meta, state, RES, LEVELS, "post-empty")
+
+    # zero overlap (disjoint frame) -> churn fallback, still bitwise-right
+    state = StreamMetaState(RES, CAP, LEVELS)
+    state.step(c0, m0)
+    far_c = np.full((CAP, 3), PAD_COORD, np.int32)
+    far_m = np.zeros(CAP, bool)
+    far_c[:4] = [[15, 15, 15], [15, 15, 14], [15, 14, 15], [14, 15, 15]]
+    far_m[:4] = True
+    # make the far frame disjoint from frame 0's active set
+    k0 = set(linear_key_np(c0[m0], RES).tolist())
+    assert not set(linear_key_np(far_c[:4], RES).tolist()) & k0
+    meta = state.step(far_c, far_m)
+    assert meta.mode == "rebuilt" and meta.info["fallback"] == "churn"
+    assert meta.overlap == 0.0
+    _assert_meta_matches_scratch(meta, state, RES, LEVELS, "disjoint")
+
+    # identical frame, no shift -> reused
+    state = StreamMetaState(RES, CAP, LEVELS)
+    state.step(c0, m0)
+    meta = state.step(c0, m0)
+    assert meta.mode == "reused" and meta.overlap == 1.0
+
+
+def test_stream_plan_state_bitwise_and_reuse():
+    cfg = UNetConfig(widths=(8, 16, 16), reps=1, resolution=RES,
+                     capacity=CAP, n_classes=N_CLASSES)
+    frames, shifts = make_lidar_sweep(11, 4, resolution=RES, capacity=CAP,
+                                      step=4, churn=0.05)
+    state = StreamPlanState(cfg, min_overlap=0.3)
+    prev_plan = None
+    for fno, ((c, f, _, m), shift) in enumerate(zip(frames, shifts)):
+        t = SparseVoxelTensor(c, f.astype(np.float32), m)
+        key, plan, frame_rows, info = state.plan_frame(t, fno, shift)
+        pc, pm = _pack_frame(c, m, frame_rows, CAP)
+        packed = SparseVoxelTensor(pc, np.zeros_like(f), pm)
+        want = build_scene_plan_host(packed, cfg, spec=None,
+                                     plan_tiles=False)
+        _assert_plans_equal(plan, want, ctx=f"frame {fno} ({info['mode']})")
+        if fno > 0:
+            assert info["mode"] == "patched"
+            # untouched levels reuse the previous ConvPlan object outright
+            # (that identity is what the device-upload memo keys on)
+            shared = sum(a.sub is b.sub for a, b in
+                         zip(plan.levels, prev_plan.levels))
+            assert shared == 0 or info["overlap"] < 1.0  # sanity only
+        prev_plan = plan
+    st_agg = state.stats()
+    assert st_agg["frames"] == 4 and st_agg["patched"] == 3
+
+
+def test_stream_feature_packing():
+    rng = np.random.default_rng(0)
+    frame_rows = np.full(8, -1, np.int32)
+    frame_rows[[1, 4, 6]] = [5, 0, 2]
+    vals = rng.normal(size=(8, 3)).astype(np.float32)
+    out = pack_stream_frame_np(frame_rows, vals)
+    assert out.shape == vals.shape
+    np.testing.assert_array_equal(out[5], vals[1])
+    np.testing.assert_array_equal(out[0], vals[4])
+    np.testing.assert_array_equal(out[2], vals[6])
+    assert np.all(out[[1, 3, 4, 6, 7]] == 0)
+
+
+# -- PlanCache LRU bound ----------------------------------------------------
+
+
+def test_plan_cache_max_entries():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=64,
+                     n_classes=N_CLASSES)
+    rng = np.random.default_rng(0)
+
+    def scene(i):
+        c = np.full((64, 3), PAD_COORD, np.int32)
+        m = np.zeros(64, bool)
+        pts = rng.choice(RES**3, size=20, replace=False)
+        c[:20] = np.stack([pts // (RES * RES), (pts // RES) % RES,
+                           pts % RES], 1)
+        m[:20] = True
+        return SparseVoxelTensor(c, np.ones((64, 2), np.float32), m)
+
+    cache = PlanCache(capacity=2)
+    assert cache.max_entries == 2
+    for i in range(4):
+        cache.get_or_build(scene(i), cfg, device=False, plan_tiles=False)
+    assert len(cache._plans) == 2  # LRU-bounded, oldest evicted
+
+    # adopt() (the stream path) honours the same bound
+    plan = build_scene_plan_host(scene(0), cfg, plan_tiles=False)
+    for i in range(5):
+        cache.adopt(f"stream|k{i}", plan, device=False)
+    assert len(cache._plans) == 2
+
+    # max_entries overrides capacity; a degenerate bound is rejected
+    assert PlanCache(capacity=8, max_entries=3).max_entries == 3
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=0)
+
+
+# -- serving layer ----------------------------------------------------------
+
+
+def test_stream_fifo_admission_under_policy():
+    """An urgency policy must not reorder frames *within* a stream."""
+    order = []
+    sched = WaveScheduler(
+        batch=2, plan=lambda r: None,
+        dispatch=lambda reqs, p, st: order.extend(r.rid for r in reqs),
+        drain=lambda reqs, h: None,
+        policy=AdmissionPolicy())
+    reqs = []
+    for fno, prio in [(0, 0), (1, 5), (2, 10)]:  # later frames more urgent
+        r = ServeRequest(fno, priority=prio)
+        r._stream_key = "s"
+        r._stream_frame = fno
+        reqs.append(r)
+    loner = ServeRequest(99, priority=7)
+    sched.submit(reqs + [loner])
+    sched.run()
+    assert [rid for rid in order if rid != 99] == [0, 1, 2]
+    assert sorted(order) == [0, 1, 2, 99]
+
+
+def test_skip_frame_unblocks_successors():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    frames, _ = make_lidar_sweep(5, 1, resolution=RES, capacity=CAP)
+    c, f, _, m = frames[0]
+    t = SparseVoxelTensor(c, f.astype(np.float32), m)
+    state = StreamPlanState(cfg, wait_s=30.0)
+    state.plan_frame(t, 0)
+    state.skip_frame(1)  # what the engine does when admission sheds it
+    t0 = time.perf_counter()
+    _, _, _, info = state.plan_frame(t, 2)
+    assert time.perf_counter() - t0 < 5.0  # no wait_s stall
+    # the delta base died with the skipped frame: identical coords must
+    # NOT short-circuit to "reused"
+    assert info["mode"] == "rebuilt"
+
+
+def test_serve_stream_end_to_end():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    frames, shifts = make_lidar_sweep(7, 4, resolution=RES, capacity=CAP,
+                                      step=4, churn=0.05)
+    scenes = [SparseVoxelTensor(jnp.asarray(c), jnp.asarray(f),
+                                jnp.asarray(m)) for c, f, _, m in frames]
+    eng = SceneEngine(cfg, params, batch=2, sync=True)
+    reqs = eng.serve_stream(scenes, shifts)
+    modes = [r.plan_info["mode"] for r in reqs]
+    assert modes[0] == "rebuilt" and set(modes[1:]) == {"patched"}
+
+    # bitwise vs one-shot serving of the canonical-layout packing (logits
+    # are only layout-invariant up to BN rounding, so compare like layouts)
+    packed = []
+    for (c, f, _, m), r in zip(frames, reqs):
+        fr = r._frame_rows
+        pc, pm = _pack_frame(c, m, fr, CAP)
+        pf = np.zeros_like(f)
+        pf[fr[np.flatnonzero(m)]] = f[m]
+        packed.append(SparseVoxelTensor(jnp.asarray(pc), jnp.asarray(pf),
+                                        jnp.asarray(pm)))
+    ref_eng = SceneEngine(cfg, params, batch=2, sync=True)
+    handles = ref_eng.submit([SceneRequest(i, t)
+                              for i, t in enumerate(packed)])
+    ref_eng.serve()
+    for h, r in zip(handles, reqs):
+        ref = np.asarray(h.result().logits)
+        fr = r._frame_rows
+        act = fr >= 0
+        exp = np.zeros_like(ref)
+        exp[act] = ref[fr[act]]
+        np.testing.assert_array_equal(exp, np.asarray(r.logits),
+                                      err_msg=f"frame {r.frame_no}")
+        assert r.done and r.pred is not None
+
+    # per-wave stream notes + handle stats
+    noted = [w.notes for w in eng.wave_stats if w.notes]
+    assert noted and any(n.get("stream_patched") for n in noted)
+    for n in noted:
+        assert {"stream_reused", "stream_patched", "stream_rebuilt",
+                "stream_overlap", "stream_plan_ms"} <= set(n)
+    handle = next(iter(eng._streams.values()))
+    agg = handle.stats()
+    assert agg["frames"] == 4 and agg["patched"] == 3
+
+    # streams are incompatible with bucketed/sharded modes
+    with pytest.raises(ValueError):
+        eng.open_stream(stream_id=handle.stream_id)
+
+
+def test_serve_stream_async_matches_sync():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    frames, shifts = make_lidar_sweep(9, 4, resolution=RES, capacity=CAP,
+                                      step=4, churn=0.1)
+    scenes = [SparseVoxelTensor(jnp.asarray(c), jnp.asarray(f),
+                                jnp.asarray(m)) for c, f, _, m in frames]
+    by_sync = SceneEngine(cfg, params, batch=2, sync=True).serve_stream(
+        scenes, shifts)
+    by_async = SceneEngine(cfg, params, batch=2, sync=False, depth=2,
+                           planner_threads=2).serve_stream(scenes, shifts)
+    for a, b in zip(by_sync, by_async):
+        np.testing.assert_array_equal(np.asarray(a.logits),
+                                      np.asarray(b.logits))
+        assert a.plan_info["mode"] == b.plan_info["mode"]
+
+
+def test_concurrent_streams_are_independent():
+    """Two interleaved streams keep separate delta bases and both stay
+    bitwise-correct (the planner threads gate frames per stream)."""
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    fa, sa = make_lidar_sweep(21, 3, resolution=RES, capacity=CAP,
+                              step=4, churn=0.05)
+    fb, sb = make_lidar_sweep(22, 3, resolution=RES, capacity=CAP,
+                              step=8, churn=0.2)
+    state_a = StreamPlanState(cfg, stream_id="a")
+    state_b = StreamPlanState(cfg, stream_id="b")
+    results = {}
+
+    def drive(state, frames, shifts, tag):
+        for fno, ((c, f, _, m), shift) in enumerate(zip(frames, shifts)):
+            t = SparseVoxelTensor(c, f.astype(np.float32), m)
+            out = state.plan_frame(t, fno, shift)
+            results[(tag, fno)] = (out, c, m)
+
+    th = [threading.Thread(target=drive, args=(state_a, fa, sa, "a")),
+          threading.Thread(target=drive, args=(state_b, fb, sb, "b"))]
+    for x in th:
+        x.start()
+    for x in th:
+        x.join()
+    for (tag, fno), ((key, plan, frame_rows, info), c, m) in results.items():
+        pc, pm = _pack_frame(c, m, frame_rows, CAP)
+        packed = SparseVoxelTensor(pc, np.zeros((CAP, 4), np.float32), pm)
+        want = build_scene_plan_host(packed, cfg, spec=None,
+                                     plan_tiles=False)
+        _assert_plans_equal(plan, want, ctx=f"stream {tag} frame {fno}")
+        assert key.startswith(f"stream|{tag}|")
