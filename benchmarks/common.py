@@ -1,10 +1,16 @@
-"""Shared benchmark scaffolding: scene building + timing + CSV rows +
-the fused-kernel ``block_n`` sweep (pinned into plan specs)."""
+"""Shared benchmark scaffolding: scene building + timing + CSV rows.
+
+Timing delegates to :func:`repro.engine.autotune.measure` — the same
+warmup + median-of-k harness the profile-guided dispatcher uses — so
+benchmark numbers and autotune cost-table entries are directly
+comparable. The fused-kernel ``block_n`` sweep lives in
+``repro.engine.autotune`` now; a deprecation shim below keeps old
+imports working."""
 from __future__ import annotations
 
 import time
+import warnings
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -12,6 +18,7 @@ from repro.core import soar
 from repro.core.hashgrid import build_neighbor_table, kernel_offsets
 from repro.core.sparse_conv import submanifold_coir
 from repro.data.scenes import make_scene
+from repro.engine.autotune import measure
 from repro.sparse.tensor import SparseVoxelTensor
 
 ROWS: list[tuple[str, float, str]] = []
@@ -23,19 +30,12 @@ def emit(name: str, us_per_call: float, derived: str):
 
 
 def time_fn(fn, *args, iters=3, warmup=1, reps=1):
-    """Mean us/call over ``iters``; with ``reps > 1``, best-of-``reps`` means
-    (min is robust to background load on shared CI hosts)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = fn(*args)
-            jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / iters * 1e6)  # us
-    return best
+    """Median us/call over ``iters * reps`` timed calls (median is robust
+    to background load on shared CI hosts). Thin wrapper over
+    ``engine.autotune.measure`` so benches and the autotuner share one
+    timing harness."""
+    k = max(int(iters) * int(reps), 1)
+    return measure(fn, *args, warmup=warmup, k=k).median_us
 
 
 def build_scene(seed=0, resolution=48, capacity=16384):
@@ -56,10 +56,16 @@ def scene_metadata(t: SparseVoxelTensor, resolution: int):
 # -- standalone bench CLIs ---------------------------------------------------
 
 def standalone_bench_main(run, module_name: str, quick_help: str,
-                          description: str | None = None, argv=None) -> None:
+                          description: str | None = None, argv=None,
+                          configure=None, run_kw=None) -> None:
     """Shared ``main()`` for benches with their own CI smoke CLI
     (``--quick`` / ``--json``): one place owns the CSV header, timing and
-    the ``bench-rows/v1`` JSON artifact schema."""
+    the ``bench-rows/v1`` JSON artifact schema.
+
+    ``configure(parser)`` lets a bench register extra CLI flags;
+    ``run_kw(args) -> dict`` maps the parsed namespace to extra keyword
+    arguments for ``run`` (e.g. ``--seed-from`` in ``bench_dispatch``).
+    """
     import argparse
     import json
     import sys
@@ -68,10 +74,13 @@ def standalone_bench_main(run, module_name: str, quick_help: str,
     ap.add_argument("--quick", action="store_true", help=quick_help)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact (CI perf log)")
+    if configure is not None:
+        configure(ap)
     args = ap.parse_args(argv)
+    extra = run_kw(args) if run_kw is not None else {}
     print("name,us_per_call,derived")
     t0 = time.time()
-    run(quick=args.quick)
+    run(quick=args.quick, **extra)
     total_s = time.time() - t0
     print(f"# total {total_s:.1f}s", file=sys.stderr)
     if args.json:
@@ -89,59 +98,13 @@ def standalone_bench_main(run, module_name: str, quick_help: str,
               file=sys.stderr)
 
 
-# -- fused-kernel block_n autotune -------------------------------------------
+# -- fused-kernel block_n autotune (moved) -----------------------------------
 
-# per-parameter-set memo so a plan-spec build sweeps each layer shape once
-_BLOCK_N_CACHE: dict[tuple, int] = {}
-
-
-def _block_n_candidates(n: int) -> list[int]:
-    """Divisors of ``n`` worth sweeping: full-N down to 8-wide blocks."""
-    cands = [b for b in (n, n // 2, n // 4) if b >= 8 and n % b == 0]
-    return cands or [n]
-
-
-def autotune_block_n(c_in: int, n_out: int, delta_o: int, delta_i: int,
-                     *, kernel_volume: int = 27, n_tiles: int = 8,
-                     iters: int = 3, seed: int = 0) -> int:
-    """Pick the fused kernel's N-block for one ``(C, N, dO, dI)`` signature.
-
-    Times ``kernels.sspnna.sspnna_fused`` on synthetic tiles at the layer's
-    shape for each candidate divisor of ``n_out`` and returns the fastest.
-    Memoized per full parameter set; pass as
-    ``build_plan_spec(tune_block_n=...)`` so SPADE plans pin the choice in
-    ``Dispatch.block_n`` instead of defaulting to full-N.
-    """
-    key = (c_in, n_out, delta_o, delta_i, kernel_volume, n_tiles, iters, seed)
-    if key in _BLOCK_N_CACHE:
-        return _BLOCK_N_CACHE[key]
-    from repro.kernels.sspnna.sspnna import sspnna_fused
-
-    rng = np.random.default_rng(seed)
-    # big enough for the working sets AND the n_tiles*delta_o disjoint
-    # output rows drawn below
-    v = max(4 * delta_i, n_tiles * delta_o, 256)
-    feats = jnp.asarray(rng.normal(size=(v, c_in)), jnp.float32)
-    weights = jnp.asarray(
-        rng.normal(size=(kernel_volume, c_in, n_out)) * 0.1, jnp.float32)
-    in_rows = jnp.asarray(
-        rng.integers(0, v, (n_tiles, delta_i)).astype(np.int32))
-    out_rows = jnp.asarray(
-        rng.permutation(v)[: n_tiles * delta_o]
-        .reshape(n_tiles, delta_o).astype(np.int32))
-    local_idx = jnp.asarray(
-        rng.integers(-1, delta_i, (n_tiles, delta_o, kernel_volume))
-        .astype(np.int32))
-    counts = jnp.ones((n_tiles,), jnp.int32)
-
-    best_bn, best_us = 0, float("inf")
-    for bn in _block_n_candidates(n_out):
-        us = time_fn(
-            lambda bn=bn: sspnna_fused(
-                feats, weights, out_rows, in_rows, local_idx, counts,
-                n_out=v, block_n=bn),
-            iters=iters, warmup=1)
-        if us < best_us:
-            best_bn, best_us = bn, us
-    _BLOCK_N_CACHE[key] = best_bn
-    return best_bn
+def autotune_block_n(*args, **kw):
+    """Deprecated shim: the ``block_n`` sweep moved into the engine."""
+    warnings.warn(
+        "benchmarks.common.autotune_block_n is deprecated; use "
+        "repro.engine.autotune.autotune_block_n",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine.autotune import autotune_block_n as impl
+    return impl(*args, **kw)

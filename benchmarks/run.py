@@ -17,13 +17,12 @@ import sys
 import time
 
 # modules cheap enough for the CI smoke job (reduced configs, small scenes).
-# bench_serving, bench_admission, bench_sspnna, bench_sharded_scene and
-# bench_streaming are smoked separately (their own --quick CLIs write
-# BENCH_serving.json / BENCH_admission.json / BENCH_sspnna.json /
-# BENCH_sharded_scene.json / BENCH_streaming.json) so they aren't
-# duplicated here.
-QUICK = ("bench_dispatch", "bench_soar", "bench_spade_attrs", "bench_moe",
-         "bench_dataflow")
+# bench_serving, bench_admission, bench_sspnna, bench_sharded_scene,
+# bench_streaming and bench_dispatch are smoked separately (their own
+# --quick CLIs write BENCH_serving.json / BENCH_admission.json /
+# BENCH_sspnna.json / BENCH_sharded_scene.json / BENCH_streaming.json /
+# BENCH_dispatch.json) so they aren't duplicated here.
+QUICK = ("bench_soar", "bench_spade_attrs", "bench_moe", "bench_dataflow")
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,769 @@
+"""Profile-guided SPADE: measured cost tables, autotune cache, re-profiling.
+
+SPADE picks a dataflow per layer from the paper's analytical data-access
+model (Eqn 5, ``core.spade``); our own benchmarks show the model can be
+badly wrong on a real target — ``BENCH_sspnna.json`` has the fused kernel
+at 0.18x of XLA's gather-einsum on CPU interpret even though the model
+says it wins. TorchSparse attributes much of its speedup to replacing
+exactly this kind of static modeling with *measured* adaptive tuning.
+This module closes that loop:
+
+* :func:`measure` — the shared warmup + median-of-k timing harness
+  (``block_until_ready`` on every timed call). ``benchmarks.common.time_fn``
+  is a thin wrapper over it, so the tuner and the bench suite agree on
+  what a microsecond means.
+* :class:`CostTable` — measured per-backend wall-clock keyed by a bucketed
+  shape signature ``(n_in, n_out, C_in, C_out, K, density-bin, backend,
+  block_n)``, with a persistent JSON cache (versioned with the plan-layout
+  version plus a jax/device fingerprint; corrupt or stale files are
+  ignored, writes are atomic), seedable from CI's ``BENCH_*.json``
+  artifacts (:func:`seed_cost_table`).
+* dispatch consult — ``engine.plan.build_plan_spec`` and adaptive plan
+  builds call :meth:`CostTable.adjust_dispatch` first and fall back to the
+  analytical decision on a miss (recording the miss); a cold table is
+  bitwise identical to the unmeasured dispatcher.
+* plan "recompilation" — when the measured winner for a signature flips,
+  the table bumps its ``generation`` (part of its ``repr``, and therefore
+  of every ``PlanCache`` key built with ``autotune=``) and fires its flip
+  hooks (``ExecutionContext`` wires ``plan_cache.invalidate`` in).
+* :func:`reprofile` — the budgeted idle-gap worker ``WaveScheduler`` runs
+  between waves (``on_idle``): re-measures the hottest missed signatures,
+  then the stalest still-consulted ones, on a synthetic workload at the
+  signature's shape through *every* registered backend able to run it
+  (:func:`measure_backends` walks the ``BackendRegistry``), so new
+  backends are tuned without touching the tuner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.plan import (
+    _PLAN_VERSION,
+    REFERENCE,
+    REFERENCE_DISPATCH,
+    SSPNNA,
+    Dispatch,
+    conv_plan_for_layer,
+)
+
+_SCHEMA = "repro-autotune/v1"
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+#: density-bin edges (log-spaced); scene sparsity only matters to dispatch
+#: at order-of-magnitude granularity, and coarse bins are what make cached
+#: measurements transfer across scenes
+_DENSITY_EDGES = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1)
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed signature: median and IQR spread of ``k`` samples (us)."""
+
+    median_us: float
+    spread_us: float
+    k: int
+    times_us: tuple = ()
+
+
+def measure(fn, *args, warmup: int = 1, k: int = 5) -> Measurement:
+    """Warmup + median-of-``k`` wall-clock of ``fn(*args)`` in us.
+
+    Every call — warmup included — is ``jax.block_until_ready``'d, so
+    async dispatch can't leak device time out of (or host time into) the
+    sample. The median defeats one-off scheduler hiccups; ``spread_us``
+    (interquartile range) is the noise floor callers can gate on.
+    """
+    for _ in range(max(int(warmup), 0)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(int(k), 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    spread = float(np.percentile(times, 75) - np.percentile(times, 25))
+    return Measurement(float(np.median(times)), spread, len(times),
+                       tuple(times))
+
+
+# ---------------------------------------------------------------------------
+# Shape signatures
+# ---------------------------------------------------------------------------
+
+def _pow2(n: int) -> int:
+    """Round up to the next power of two (0 stays 0): measured costs must
+    transfer across scenes, so row counts are bucketed, never exact."""
+    n = int(n)
+    return 1 << (n - 1).bit_length() if n > 0 else 0
+
+
+def density_bin(density: float) -> int:
+    """Log-spaced sparsity bucket of an active-voxel density in [0, 1]."""
+    return int(np.searchsorted(_DENSITY_EDGES, max(float(density), 0.0),
+                               side="right"))
+
+
+def _bin_density(b: int) -> float:
+    """Representative density of a bin (geometric midpoint) — what the
+    synthetic re-profiling workloads are generated at."""
+    edges = (0.0,) + _DENSITY_EDGES + (1.0,)
+    b = min(max(int(b), 0), len(edges) - 2)
+    lo, hi = edges[b], edges[b + 1]
+    return hi / 2.0 if lo == 0.0 else float(np.sqrt(lo * hi))
+
+
+@dataclass(frozen=True)
+class ShapeSig:
+    """One cost-table key. ``n_in``/``n_out`` are power-of-two row-count
+    buckets and ``density_bin`` a log-spaced sparsity bucket (exact values
+    never repeat across scenes; buckets do). ``backend``/``block_n``
+    distinguish measurements of the same shape; zeroing them
+    (:meth:`group`) yields the lookup key dispatch consults."""
+
+    n_in: int
+    n_out: int
+    c_in: int
+    c_out: int
+    k: int
+    density_bin: int
+    backend: str = ""
+    block_n: int = 0
+
+    def group(self) -> "ShapeSig":
+        """The backend-free shape key measurements compete under."""
+        if not self.backend and not self.block_n:
+            return self
+        return dataclasses.replace(self, backend="", block_n=0)
+
+    def encode(self) -> str:
+        return (f"{self.n_in}:{self.n_out}:{self.c_in}:{self.c_out}:"
+                f"{self.k}:{self.density_bin}:{self.backend}:{self.block_n}")
+
+    @classmethod
+    def decode(cls, s: str) -> "ShapeSig":
+        parts = s.split(":")
+        if len(parts) != 8:
+            raise ValueError(f"malformed ShapeSig {s!r}")
+        nums = [int(p) for p in parts[:6]]
+        return cls(*nums, backend=parts[6], block_n=int(parts[7]))
+
+
+def signature(n_in: int, n_out: int, c_in: int, c_out: int, *,
+              density: float, kernel_volume: int = 27, backend: str = "",
+              block_n: int = 0) -> ShapeSig:
+    """Bucketed signature of one conv site (the key everything agrees on:
+    dispatch consults, profiling records, benches seed)."""
+    return ShapeSig(_pow2(n_in), _pow2(n_out), int(c_in), int(c_out),
+                    int(kernel_volume), density_bin(density), backend,
+                    int(block_n))
+
+
+# ---------------------------------------------------------------------------
+# Cost table
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CostEntry:
+    """One measured (signature, backend) cost. ``delta_o``/``delta_i`` are
+    the tile shape the measurement ran at — what a reference->sspnna flip
+    tiles the plan with; ``seq`` is the table-local recency stamp."""
+
+    sig: ShapeSig
+    median_us: float
+    spread_us: float = 0.0
+    k: int = 1
+    delta_o: int = 0
+    delta_i: int = 0
+    seq: int = 0
+
+
+def device_fingerprint() -> str:
+    """jax version + platform + device kind: a cached measurement is only
+    meaningful on the stack that produced it."""
+    try:
+        dev = jax.devices()[0]
+        kind = getattr(dev, "device_kind", "") or dev.platform
+    except Exception:  # no devices in exotic test rigs
+        kind = "unknown"
+    return f"jax={jax.__version__}|{jax.default_backend()}|{kind}"
+
+
+def default_cache_path() -> str:
+    """On-disk cache location; override with ``REPRO_AUTOTUNE_CACHE``."""
+    env = os.environ.get(_ENV_CACHE)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+class CostTable:
+    """Measured per-backend cost per shape signature, with flip tracking.
+
+    Thread-safe (planner threads consult while an idle hook records).
+    ``generation`` counts measured-winner flips; it is part of ``repr`` —
+    and ``PlanCache.key_for`` reprs its build kwargs into every key — so
+    passing ``autotune=table`` to a plan build makes cached plans
+    self-invalidate on a flip, and :meth:`add_flip_hook` lets an
+    ``ExecutionContext`` clear already-cached entries eagerly.
+
+    A *miss* (consulted signature with no measurements) falls back to the
+    analytical decision unchanged and is counted per signature; the idle
+    re-profiler drains the hottest misses first.
+    """
+
+    def __init__(self, *, fingerprint: str | None = None):
+        self.fingerprint = (device_fingerprint() if fingerprint is None
+                            else fingerprint)
+        self.generation = 0
+        self.hits = 0
+        #: how the table came to be: fresh | ok | missing | corrupt |
+        #: version-mismatch | fingerprint-mismatch (see :meth:`load`)
+        self.load_status = "fresh"
+        self._groups: dict[ShapeSig, dict[ShapeSig, CostEntry]] = {}
+        self._misses: dict[ShapeSig, dict] = {}
+        self._group_hits: dict[ShapeSig, int] = {}
+        self._seq = 0
+        self._lock = threading.RLock()
+        self._flip_hooks: list = []
+
+    def __repr__(self):
+        # deliberately generation-only: plan-cache keys embed this repr and
+        # must change exactly when the measured winner flips, not on every
+        # recorded sample
+        return f"CostTable(gen={self.generation})"
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(g) for g in self._groups.values())
+
+    def entries(self) -> list[CostEntry]:
+        with self._lock:
+            return [e for g in self._groups.values() for e in g.values()]
+
+    @property
+    def miss_count(self) -> int:
+        with self._lock:
+            return sum(m["count"] for m in self._misses.values())
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": sum(len(g) for g in self._groups.values()),
+                    "groups": len(self._groups), "hits": self.hits,
+                    "misses": sum(m["count"] for m in self._misses.values()),
+                    "generation": self.generation}
+
+    # -- recording ---------------------------------------------------------
+
+    def add_flip_hook(self, fn) -> None:
+        """Call ``fn()`` whenever the measured winner of any signature
+        flips (``ExecutionContext`` registers ``plan_cache.invalidate``)."""
+        self._flip_hooks.append(fn)
+
+    def _best_locked(self, gk: ShapeSig) -> CostEntry | None:
+        g = self._groups.get(gk)
+        if not g:
+            return None
+        return min(g.values(), key=lambda e: e.median_us)
+
+    def record(self, sig: ShapeSig, median_us: float, *,
+               spread_us: float = 0.0, k: int = 1, delta_o: int = 0,
+               delta_i: int = 0) -> bool:
+        """Record one measurement; returns True when it flipped the
+        signature's winner (generation bumped, flip hooks fired). A first
+        measurement of a signature that had recorded misses also counts as
+        a flip — plans were built against the analytical fallback."""
+        if not sig.backend:
+            raise ValueError("record() needs sig.backend set")
+        gk = sig.group()
+        with self._lock:
+            prev = self._best_locked(gk)
+            prev_win = ((prev.sig.backend, prev.sig.block_n)
+                        if prev is not None else None)
+            had_miss = gk in self._misses
+            self._seq += 1
+            self._groups.setdefault(gk, {})[sig] = CostEntry(
+                sig, float(median_us), float(spread_us), int(k),
+                int(delta_o), int(delta_i), self._seq)
+            self._misses.pop(gk, None)
+            self._group_hits[gk] = 0
+            best = self._best_locked(gk)
+            win = (best.sig.backend, best.sig.block_n)
+            flipped = (win != prev_win) if prev_win is not None else had_miss
+            if flipped:
+                self.generation += 1
+            hooks = list(self._flip_hooks) if flipped else ()
+        for fn in hooks:
+            fn()
+        return flipped
+
+    # -- lookup ------------------------------------------------------------
+
+    def best(self, sig: ShapeSig) -> CostEntry | None:
+        """Cheapest measured entry for ``sig``'s shape group (any backend);
+        None on a cold group. Counts as consultation interest for the
+        staleness-driven re-profiler."""
+        gk = sig.group()
+        with self._lock:
+            e = self._best_locked(gk)
+            if e is not None:
+                self._group_hits[gk] = self._group_hits.get(gk, 0) + 1
+            return e
+
+    def note_miss(self, sig: ShapeSig, *, delta_o: int = 0,
+                  delta_i: int = 0, backend: str = "") -> None:
+        """Count a consulted-but-unmeasured signature, remembering the
+        analytical dispatch parameters so re-profiling can tile with them."""
+        gk = sig.group()
+        with self._lock:
+            m = self._misses.setdefault(
+                gk, {"count": 0, "delta_o": 0, "delta_i": 0, "backend": ""})
+            m["count"] += 1
+            if delta_o:
+                m["delta_o"], m["delta_i"] = int(delta_o), int(delta_i)
+            if backend:
+                m["backend"] = backend
+
+    def clear_miss(self, sig: ShapeSig) -> None:
+        with self._lock:
+            self._misses.pop(sig.group(), None)
+
+    def hottest_misses(self, n: int | None = None) -> list[tuple[ShapeSig,
+                                                                 dict]]:
+        """Missed signatures by consult count, hottest first."""
+        with self._lock:
+            items = sorted(self._misses.items(),
+                           key=lambda kv: -kv[1]["count"])
+        return items if n is None else items[:n]
+
+    def stalest_groups(self, n: int | None = None) -> list[ShapeSig]:
+        """Measured groups consulted since their last measurement, oldest
+        measurement first — the re-profiler's second-priority queue."""
+        with self._lock:
+            cands = [(gk, max(e.seq for e in g.values()))
+                     for gk, g in self._groups.items()
+                     if self._group_hits.get(gk, 0) > 0]
+        cands.sort(key=lambda kv: kv[1])
+        out = [gk for gk, _ in cands]
+        return out if n is None else out[:n]
+
+    # -- dispatch consult --------------------------------------------------
+
+    def adjust_dispatch(self, dispatch: Dispatch, *, n_in: int, n_out: int,
+                        c_in: int, c_out: int, density: float,
+                        kernel_volume: int = 27) -> Dispatch:
+        """Measured-winner override of one analytical ``Dispatch``.
+
+        Cold group: the analytical decision is returned *unchanged* (and
+        the miss recorded) — a cold table is bitwise-identical to the
+        unmeasured dispatcher. On a hit, the cheapest measured backend
+        wins: flips to reference drop the tile parameters; flips to sspnna
+        tile with the winning measurement's ``delta_o``/``delta_i`` (from
+        the analytical decision when the measurement carries none) and
+        adopt its measured ``block_n``.
+        """
+        gk = signature(n_in, n_out, c_in, c_out, density=density,
+                       kernel_volume=kernel_volume)
+        best = self.best(gk)
+        if best is None:
+            self.note_miss(gk, delta_o=dispatch.delta_o,
+                           delta_i=dispatch.delta_i,
+                           backend=dispatch.backend)
+            return dispatch
+        with self._lock:
+            self.hits += 1
+        win = best.sig.backend
+        if win == dispatch.backend:
+            if win == SSPNNA and best.sig.block_n and not dispatch.block_n:
+                return dataclasses.replace(dispatch,
+                                           block_n=best.sig.block_n)
+            return dispatch
+        if win == REFERENCE:
+            return REFERENCE_DISPATCH
+        if win == SSPNNA:
+            d_o = best.delta_o or dispatch.delta_o
+            d_i = best.delta_i or dispatch.delta_i
+            if not (d_o and d_i):  # nothing to tile with; keep analytical
+                return dispatch
+            return Dispatch(SSPNNA, "CIRF", dispatch.walk or "OS",
+                            int(d_o), int(d_i), 0, best.sig.block_n)
+        return dataclasses.replace(dispatch, backend=win)
+
+    # -- persistence -------------------------------------------------------
+
+    def to_payload(self) -> dict:
+        with self._lock:
+            entries = [{"sig": e.sig.encode(), "median_us": e.median_us,
+                        "spread_us": e.spread_us, "k": e.k,
+                        "delta_o": e.delta_o, "delta_i": e.delta_i}
+                       for g in self._groups.values() for e in g.values()]
+            return {"schema": _SCHEMA, "plan_version": _PLAN_VERSION,
+                    "fingerprint": self.fingerprint,
+                    "generation": self.generation, "entries": entries}
+
+    def save(self, path: str | None = None) -> str:
+        """Atomic write (tmp file + rename) so a crashed writer can never
+        leave a truncated cache for the next process to trip on."""
+        path = path or default_cache_path()
+        payload = self.to_payload()
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    @classmethod
+    def load(cls, path: str | None = None, *,
+             fingerprint: str | None = None) -> "CostTable":
+        """Load a cached table; *any* problem — missing file, corrupt or
+        truncated JSON, plan-version or device-fingerprint mismatch —
+        yields an empty table (``load_status`` says why) rather than an
+        error or a stale measurement."""
+        path = path or default_cache_path()
+        table = cls(fingerprint=fingerprint)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except FileNotFoundError:
+            table.load_status = "missing"
+            return table
+        except (OSError, ValueError, UnicodeDecodeError):
+            table.load_status = "corrupt"
+            return table
+        try:
+            if (not isinstance(payload, dict)
+                    or payload.get("schema") != _SCHEMA
+                    or int(payload.get("plan_version", -1)) != _PLAN_VERSION):
+                table.load_status = "version-mismatch"
+                return table
+            if payload.get("fingerprint") != table.fingerprint:
+                table.load_status = "fingerprint-mismatch"
+                return table
+            for row in payload.get("entries", []):
+                table.record(ShapeSig.decode(row["sig"]),
+                             float(row["median_us"]),
+                             spread_us=float(row.get("spread_us", 0.0)),
+                             k=int(row.get("k", 1)),
+                             delta_o=int(row.get("delta_o", 0)),
+                             delta_i=int(row.get("delta_i", 0)))
+            table.generation = int(payload.get("generation", 0))
+        except (KeyError, TypeError, ValueError, AttributeError):
+            fresh = cls(fingerprint=fingerprint)
+            fresh.load_status = "corrupt"
+            return fresh
+        table.load_status = "ok"
+        return table
+
+
+# ---------------------------------------------------------------------------
+# Seeding from bench artifacts
+# ---------------------------------------------------------------------------
+
+def _derived_tokens(derived: str) -> dict:
+    out = {}
+    for tok in derived.split():
+        if "=" in tok:
+            key, val = tok.split("=", 1)
+            out[key] = val
+    return out
+
+
+_SSPNNA_ROW = re.compile(r"sspnna/r(\d+)_.*_(fused|xla)$")
+
+
+def _seed_row(table: CostTable, name: str, us: float, derived: str,
+              kernel_volume: int) -> bool:
+    if us <= 0:
+        return False
+    toks = _derived_tokens(derived)
+    if "sig" in toks:  # canonical form (bench_dispatch emits these)
+        try:
+            sig = ShapeSig.decode(toks["sig"])
+        except ValueError:
+            return False
+        if not sig.backend:
+            return False
+        table.record(sig, us,
+                     delta_o=int(toks.get("delta_o", 0) or 0),
+                     delta_i=int(toks.get("delta_i", 0) or 0))
+        return True
+    m = _SSPNNA_ROW.match(name)  # bench_sspnna arms: fused / xla einsum
+    if m is None:
+        return False
+    res, arm = int(m.group(1)), m.group(2)
+    try:
+        density = float(toks["density"])
+        c_in, c_out = int(toks["C"]), int(toks["N"])
+        d_o, d_i = int(toks.get("dO", 0)), int(toks.get("dI", 0))
+    except (KeyError, ValueError):
+        return False
+    n_active = max(int(round(density * res ** 3)), 1)
+    backend = SSPNNA if arm == "fused" else REFERENCE
+    sig = signature(n_active, n_active, c_in, c_out, density=density,
+                    kernel_volume=kernel_volume, backend=backend)
+    table.record(sig, us,
+                 delta_o=d_o if backend == SSPNNA else 0,
+                 delta_i=d_i if backend == SSPNNA else 0)
+    return True
+
+
+def seed_cost_table(table: CostTable, paths, *,
+                    kernel_volume: int = 27) -> int:
+    """Seed measurements from ``bench-rows/v1`` JSON artifacts.
+
+    Two row shapes are understood: rows whose ``derived`` carries an
+    explicit ``sig=<encoded>`` token (what ``bench_dispatch`` emits), and
+    ``bench_sspnna`` sweep rows (``sspnna/r<res>_*_{fused,xla}`` — fused
+    maps to the ``sspnna`` backend, the xla gather-einsum to ``reference``;
+    the pre-gathered arm matches no engine backend and is skipped), whose
+    signature is reconstructed from the derived ``density/dO/dI/C/N``
+    tokens. Unreadable files and unrecognized rows are skipped. Returns
+    the number of entries recorded.
+    """
+    n = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            continue
+        for row in payload.get("rows", []) if isinstance(payload, dict) \
+                else []:
+            try:
+                if _seed_row(table, str(row.get("name", "")),
+                             float(row.get("us_per_call", 0.0)),
+                             str(row.get("derived", "")), kernel_volume):
+                    n += 1
+            except (TypeError, ValueError):
+                continue
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Backend profiling
+# ---------------------------------------------------------------------------
+
+def measure_backends(plan, feats, params, *, registry=None, ctx=None,
+                     warmup: int = 1, k: int = 3,
+                     **run_kw) -> dict[str, Measurement]:
+    """Measured cost of every registered backend able to run ``plan``.
+
+    Walks the ``BackendRegistry`` (scene-level backends and those whose
+    ``supports(plan)`` says no are skipped), so a newly registered backend
+    is profiled — and therefore eligible to win dispatch — without any
+    tuner changes. Returns ``{backend_name: Measurement}``.
+    """
+    if registry is None:
+        from repro.engine.backends import default_registry
+        registry = default_registry()
+    if ctx is None:
+        from repro.engine.context import current_context
+        ctx = current_context()
+    out: dict[str, Measurement] = {}
+    for name in registry.names():
+        impl = registry.get(name)
+        if impl.scene_level or not impl.supports(plan):
+            continue
+        try:
+            out[name] = measure(
+                lambda impl=impl: impl.run(feats, params, plan, ctx=ctx,
+                                           **run_kw),
+                warmup=warmup, k=k)
+        except NotImplementedError:
+            continue
+    return out
+
+
+def _synth_workload(gk: ShapeSig, *, delta_o: int = 0, delta_i: int = 0,
+                    seed: int = 0):
+    """A genuine tiled conv workload at a signature's bucketed shape:
+    unique random voxels at the bin's representative density, real CIRF
+    metadata and tile tables. None when the signature can't be realized
+    (non-3^3 kernels, zero rows, un-tileable deltas)."""
+    from repro.core.hashgrid import kernel_offsets
+    from repro.core.host_meta import build_cirf_np
+    from repro.core.sparse_conv import SparseConvParams
+
+    if gk.k != 27 or gk.n_out <= 0 or gk.c_in <= 0 or gk.c_out <= 0:
+        return None
+    n = max(int(gk.n_out), 8)
+    density = _bin_density(gk.density_bin)
+    res = int(np.ceil((n / density) ** (1.0 / 3.0)))
+    res = min(max(res, 2), 512)
+    while res ** 3 <= n:
+        res += 1
+    total = res ** 3
+    rng = np.random.default_rng(seed)
+    cells = np.unique(rng.integers(0, total, size=2 * n + 16))
+    while cells.size < n:
+        cells = np.unique(np.concatenate(
+            [cells, rng.integers(0, total, size=n)]))
+    cells = rng.permutation(cells)[:n]
+    coords = np.stack(np.unravel_index(cells, (res, res, res)),
+                      axis=1).astype(np.int32)
+    mask = np.ones(n, bool)
+    coir = build_cirf_np(coords, mask, coords, mask, kernel_offsets(3), res)
+    ordering = np.flatnonzero(mask)
+    d_o = min(int(delta_o) or min(64, max(8, n // 8)), n)
+    d_i = int(delta_i) or (3 * d_o + gk.k)
+    plan = None
+    while plan is None:
+        try:
+            plan = conv_plan_for_layer(coir, ordering, d_o, d_i)
+        except ValueError:  # plane-split tiles: widen the working set
+            if d_i >= n + gk.k:
+                return None
+            d_i = min(2 * d_i, n + gk.k)
+    feats = jnp.asarray(rng.normal(size=(n, gk.c_in)), jnp.float32)
+    params = SparseConvParams(
+        jnp.asarray(rng.normal(size=(gk.k, gk.c_in, gk.c_out)) * 0.1,
+                    jnp.float32),
+        jnp.zeros((gk.c_out,), jnp.float32))
+    return plan, feats, params
+
+
+def profile_group(table: CostTable, sig: ShapeSig, *, delta_o: int = 0,
+                  delta_i: int = 0, registry=None, ctx=None, k: int = 3,
+                  seed: int = 0, **run_kw) -> dict[str, Measurement]:
+    """Measure every runnable backend at one signature group and record
+    the results (clearing the group's miss). Empty when the signature
+    can't be synthesized — the miss is dropped so the re-profiler never
+    spins on it."""
+    gk = sig.group()
+    work = _synth_workload(gk, delta_o=delta_o, delta_i=delta_i, seed=seed)
+    if work is None:
+        table.clear_miss(gk)
+        return {}
+    plan, feats, params = work
+    results = measure_backends(plan, feats, params, registry=registry,
+                               ctx=ctx, k=k, **run_kw)
+    d = plan.dispatch
+    for name, m in results.items():
+        table.record(dataclasses.replace(gk, backend=name), m.median_us,
+                     spread_us=m.spread_us, k=m.k,
+                     delta_o=d.delta_o, delta_i=d.delta_i)
+    if not results:
+        table.clear_miss(gk)
+    return results
+
+
+def reprofile(table: CostTable, *, registry=None, ctx=None,
+              budget_ms: float = 50.0, max_sigs: int | None = None,
+              k: int = 2, seed: int = 0, **run_kw) -> int:
+    """Budgeted re-profiling pass: hottest missed signatures first, then
+    the stalest still-consulted measured ones.
+
+    This is what a ``WaveScheduler`` idle-gap hook runs between waves —
+    strictly off the serving hot path, and off entirely at
+    ``budget_ms <= 0`` (the default everywhere tests don't opt in). The
+    wall-clock budget is checked before each signature, so one pass costs
+    at most ``budget_ms`` plus a single signature's profiling time.
+    Returns the number of signature groups profiled.
+    """
+    if budget_ms <= 0:
+        return 0
+    t0 = time.perf_counter()
+    done = 0
+    while max_sigs is None or done < max_sigs:
+        if (time.perf_counter() - t0) * 1e3 >= budget_ms:
+            break
+        target, d_o, d_i = None, 0, 0
+        misses = table.hottest_misses(1)
+        if misses:
+            target, m = misses[0]
+            d_o, d_i = m["delta_o"], m["delta_i"]
+        else:
+            stale = table.stalest_groups(1)
+            if stale:
+                target = stale[0]
+        if target is None:
+            break
+        profile_group(table, target, delta_o=d_o, delta_i=d_i,
+                      registry=registry, ctx=ctx, k=k, seed=seed + done,
+                      **run_kw)
+        done += 1
+    return done
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel block_n sweep (moved from benchmarks.common)
+# ---------------------------------------------------------------------------
+
+# per-parameter-set memo so a plan-spec build sweeps each layer shape once
+_BLOCK_N_CACHE: dict[tuple, int] = {}
+
+
+def _block_n_candidates(n: int) -> list[int]:
+    """Divisors of ``n`` worth sweeping: full-N down to 8-wide blocks."""
+    cands = [b for b in (n, n // 2, n // 4) if b >= 8 and n % b == 0]
+    return cands or [n]
+
+
+def autotune_block_n(c_in: int, n_out: int, delta_o: int, delta_i: int,
+                     *, kernel_volume: int = 27, n_tiles: int = 8,
+                     iters: int = 3, seed: int = 0) -> int:
+    """Pick the fused kernel's N-block for one ``(C, N, dO, dI)`` signature.
+
+    Times ``kernels.sspnna.sspnna_fused`` on synthetic tiles at the layer's
+    shape for each candidate divisor of ``n_out`` and returns the fastest.
+    Memoized per full parameter set; pass as
+    ``build_plan_spec(tune_block_n=...)`` so SPADE plans pin the choice in
+    ``Dispatch.block_n`` instead of defaulting to full-N.
+    """
+    key = (c_in, n_out, delta_o, delta_i, kernel_volume, n_tiles, iters, seed)
+    if key in _BLOCK_N_CACHE:
+        return _BLOCK_N_CACHE[key]
+    from repro.kernels.sspnna.sspnna import sspnna_fused
+
+    rng = np.random.default_rng(seed)
+    # big enough for the working sets AND the n_tiles*delta_o disjoint
+    # output rows drawn below
+    v = max(4 * delta_i, n_tiles * delta_o, 256)
+    feats = jnp.asarray(rng.normal(size=(v, c_in)), jnp.float32)
+    weights = jnp.asarray(
+        rng.normal(size=(kernel_volume, c_in, n_out)) * 0.1, jnp.float32)
+    in_rows = jnp.asarray(
+        rng.integers(0, v, (n_tiles, delta_i)).astype(np.int32))
+    out_rows = jnp.asarray(
+        rng.permutation(v)[: n_tiles * delta_o]
+        .reshape(n_tiles, delta_o).astype(np.int32))
+    local_idx = jnp.asarray(
+        rng.integers(-1, delta_i, (n_tiles, delta_o, kernel_volume))
+        .astype(np.int32))
+    counts = jnp.ones((n_tiles,), jnp.int32)
+
+    best_bn, best_us = 0, float("inf")
+    for bn in _block_n_candidates(n_out):
+        us = measure(
+            lambda bn=bn: sspnna_fused(
+                feats, weights, out_rows, in_rows, local_idx, counts,
+                n_out=v, block_n=bn),
+            warmup=1, k=iters).median_us
+        if us < best_us:
+            best_bn, best_us = bn, us
+    _BLOCK_N_CACHE[key] = best_bn
+    return best_bn

@@ -308,6 +308,20 @@ class PlanCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
+
+    def invalidate(self) -> int:
+        """Drop every cached entry (in-flight builds are unaffected: they
+        insert fresh entries when they land). This is the autotune
+        winner-flip hook — ``engine.autotune.CostTable`` fires it when a
+        measured winner changes, so plans keyed under the old decision are
+        rebuilt instead of served stale. Returns the number of entries
+        dropped."""
+        with self._lock:
+            n = len(self._plans)
+            self._plans.clear()
+            self.invalidations += 1
+        return n
 
     @staticmethod
     def _resolve(entry: dict, device: bool) -> ScenePlan:
@@ -479,6 +493,7 @@ def build_plan_spec(
     soar_chunk: int = 512,
     tile_margin: float = 2.0,
     tune_block_n=None,
+    autotune=None,
 ) -> PlanSpec:
     """Freeze per-level dispatch decisions from representative scenes.
 
@@ -489,15 +504,22 @@ def build_plan_spec(
     plans keep their static shapes without drowning in padding tiles.
 
     ``tune_block_n`` is an optional ``(c_in, n_out, delta_o, delta_i) -> int``
-    hook (e.g. ``benchmarks.common.autotune_block_n``) that picks the fused
-    kernel's N-block per layer signature; the choice is pinned in each
+    hook (e.g. ``repro.engine.autotune.autotune_block_n``) that picks the
+    fused kernel's N-block per layer signature; the choice is pinned in each
     level's ``Dispatch.block_n`` so every plan built from this spec runs the
     tuned block instead of defaulting to full-N.
+
+    ``autotune`` is an optional measured :class:`~repro.engine.autotune.
+    CostTable`: each level's analytical decision is overridden by the
+    cheapest *measured* backend at the level's shape signature when the
+    table has one, and left untouched (miss recorded) when it doesn't — a
+    cold table reproduces the analytical spec bitwise.
     """
     offs3 = kernel_offsets(3)
     n_levels = len(cfg.widths)
     per_level: list[list[spade.SparsityAttributes]] = [[] for _ in range(n_levels)]
     observed_tiles: list[int] = [0] * n_levels
+    level_density: list[float] = [0.0] * n_levels
     geo_attrs = []
     for t in scenes:
         rows = []
@@ -507,6 +529,8 @@ def build_plan_spec(
             attrs = spade.extract_attributes(
                 np.asarray(coir.indices), np.asarray(mask), ordering)
             per_level[li].append(attrs)
+            level_density[li] += (float(np.asarray(mask).sum())
+                                  / float(max(res, 1)) ** 3 / len(scenes))
             rows.append((coir, ordering))
         geo_attrs.append(rows)
 
@@ -516,6 +540,11 @@ def build_plan_spec(
         layer = _layer_spec(f"level{li}", cfg.capacity, cfg.widths[li])
         df = spade.explore(layer, {"CIRF": msa, "CORF": msa}, mem_budget)
         d = dispatch_from_dataflow(df, msa, cfg.capacity)
+        if autotune is not None:
+            d = autotune.adjust_dispatch(
+                d, n_in=cfg.capacity, n_out=cfg.capacity,
+                c_in=cfg.widths[li], c_out=cfg.widths[li],
+                density=level_density[li], kernel_volume=_K_SUB)
         if d.backend == SSPNNA:
             # worst observed budgeted tile count across the rep scenes
             for rows in geo_attrs:
@@ -528,7 +557,7 @@ def build_plan_spec(
                           int(np.ceil(tile_margin * observed_tiles[li])) + 2)
             block_n = (int(tune_block_n(cfg.widths[li], cfg.widths[li],
                                         d.delta_o, d.delta_i))
-                       if tune_block_n is not None else 0)
+                       if tune_block_n is not None else d.block_n)
             d = Dispatch(d.backend, d.flavor, d.walk, d.delta_o, d.delta_i,
                          n_tiles, block_n)
         dispatches.append(d)
@@ -607,16 +636,20 @@ def build_scene_plan_host(
     mem_budget: int = 64 * 1024,
     order: str = "soar",
     soar_chunk: int = 512,
+    autotune=None,
 ) -> ScenePlan:
     """Host half of ``build_scene_plan``: all array leaves are numpy.
 
     This is the paper's offline pass (AdMAC metadata + SOAR reordering +
     SPADE selection + tile tables) with the device upload factored out —
     pair with ``upload_scene_plan``. Safe to call from planner threads.
+    ``autotune`` (a measured ``engine.autotune.CostTable``) overrides
+    adaptive-mode dispatch decisions with measured winners; see
+    ``build_plan_spec``.
     """
     plan = _build_scene_plan(t, cfg, spec=spec, plan_tiles=plan_tiles,
                              mem_budget=mem_budget, order=order,
-                             soar_chunk=soar_chunk)
+                             soar_chunk=soar_chunk, autotune=autotune)
     return _map_leaves(plan, np.asarray)
 
 
@@ -629,6 +662,7 @@ def build_scene_plan(
     mem_budget: int = 64 * 1024,
     order: str = "soar",
     soar_chunk: int = 512,
+    autotune=None,
 ) -> ScenePlan:
     """One AdMAC + SOAR + SPADE pass -> a device-ready ScenePlan.
 
@@ -639,7 +673,7 @@ def build_scene_plan(
     """
     return upload_scene_plan(build_scene_plan_host(
         t, cfg, spec=spec, plan_tiles=plan_tiles, mem_budget=mem_budget,
-        order=order, soar_chunk=soar_chunk))
+        order=order, soar_chunk=soar_chunk, autotune=autotune))
 
 
 def _build_scene_plan(
@@ -651,6 +685,7 @@ def _build_scene_plan(
     mem_budget: int = 64 * 1024,
     order: str = "soar",
     soar_chunk: int = 512,
+    autotune=None,
 ) -> ScenePlan:
     if spec is not None and len(spec.levels) != len(cfg.widths):
         raise ValueError(
@@ -676,7 +711,8 @@ def _build_scene_plan(
 
         sub, info = _assemble_level(
             sub_coir, coords, mask, li, cfg, spec=spec, plan_tiles=plan_tiles,
-            mem_budget=mem_budget, order=order, soar_chunk=soar_chunk)
+            mem_budget=mem_budget, order=order, soar_chunk=soar_chunk,
+            autotune=autotune)
         stats.append(info)
         levels.append(LevelPlan(coords, mask, sub, down, up))
     return ScenePlan(tuple(levels), stats)
@@ -694,12 +730,14 @@ def _assemble_level(
     mem_budget: int,
     order: str,
     soar_chunk: int,
+    autotune=None,
 ) -> tuple[ConvPlan, dict]:
     """Dispatch/ordering/tile assembly for one level's submanifold conv.
 
-    Deterministic in ``(sub_coir, coords, mask)`` — the streaming planner
-    relies on this: running it on a patched (bitwise-equal) COIR yields
-    bitwise-equal orderings, tiles and dispatch decisions.
+    Deterministic in ``(sub_coir, coords, mask)`` for a fixed ``autotune``
+    table state — the streaming planner relies on this: running it on a
+    patched (bitwise-equal) COIR yields bitwise-equal orderings, tiles and
+    dispatch decisions.
     """
     n_active = int(np.asarray(mask).sum())
     info: dict = {"level": li, "n_active": n_active}
@@ -718,6 +756,15 @@ def _assemble_level(
             dispatch = dispatch_from_dataflow(df, attrs, n_active)
             info["arf"] = float(attrs.arf_avg[0])
             info["da_elems"] = df.da_elems
+            if autotune is not None:
+                # measured-winner consult; a miss (recorded) keeps the
+                # analytical decision bitwise-unchanged
+                res3 = float(max(cfg.resolution >> li, 1)) ** 3
+                dispatch = autotune.adjust_dispatch(
+                    dispatch, n_in=n_active, n_out=n_active,
+                    c_in=cfg.widths[li], c_out=cfg.widths[li],
+                    density=n_active / res3, kernel_volume=_K_SUB)
+                info["autotuned"] = dispatch.backend
         if dispatch.backend == SSPNNA:
             if spec is not None:
                 ordering = _order_rows(sub_coir, coords, mask, order,

@@ -170,6 +170,7 @@ class WaveScheduler:
         policy: AdmissionPolicy | None = None,
         bucket_of: Callable | None = None,
         on_shed: Callable | None = None,
+        on_idle: Callable | None = None,
     ):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -187,6 +188,12 @@ class WaveScheduler:
         #: optional observer called on every shed request (e.g. the scene
         #: engine unblocks a stream whose frame was shed mid-sequence)
         self.on_shed = on_shed
+        #: optional idle-gap worker, called as ``on_idle(self)`` after a
+        #: ``run()`` drains the queue — strictly between ticks, never on
+        #: the serving hot path (the scene engine wires the autotune
+        #: re-profiler here when the context opts in with a budget)
+        self.on_idle = on_idle
+        self.idle_ticks = 0
         self._plan, self._dispatch, self._drain = plan, dispatch, drain
         self.queue: deque = deque()
         self.completed: list = []
@@ -462,7 +469,12 @@ class WaveScheduler:
             max_waves: int | None = None) -> list:
         """Serve the queue (to empty, or at most ``max_waves`` admitted
         waves — the tick-driven mode arrival simulators use); returns the
-        completed-request list. Only one ``run`` may be active at a time."""
+        completed-request list. Only one ``run`` may be active at a time.
+
+        When the queue drains completely, ``on_idle(self)`` (if set) runs
+        *after* the pipeline is done — the idle gap between ticks, where
+        background work (autotune re-profiling) can spend its budget
+        without touching a serving wave."""
         if not self._idle.is_set():
             raise RuntimeError("run() already in progress on another thread")
         self._idle.clear()
@@ -475,6 +487,9 @@ class WaveScheduler:
         finally:
             self.running_sync = None
             self._idle.set()
+        if self.on_idle is not None and not self.queue:
+            self.idle_ticks += 1
+            self.on_idle(self)
         return self.completed
 
     def _timed_plan(self, req):

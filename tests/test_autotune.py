@@ -1,0 +1,401 @@
+"""engine.autotune: measured cost tables, persistent cache, re-profiling."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data.scenes import N_CLASSES, make_scene
+from repro.engine.autotune import (
+    CostTable,
+    Measurement,
+    ShapeSig,
+    _bin_density,
+    autotune_block_n,
+    density_bin,
+    measure,
+    measure_backends,
+    profile_group,
+    reprofile,
+    seed_cost_table,
+    signature,
+)
+from repro.engine.plan import REFERENCE_DISPATCH, Dispatch
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.sparse.tensor import SparseVoxelTensor
+
+RES, CAP = 24, 2048
+BUDGET = 16 * 1024  # small L1 budget: SPADE picks an actual tiling
+
+
+def _scene(seed):
+    coords, feats, labels, mask = make_scene(seed, resolution=RES,
+                                             capacity=CAP)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    return cfg, params, _scene(0)
+
+
+# -- timing harness ----------------------------------------------------------
+
+def test_measure_median_of_k():
+    calls = []
+    m = measure(lambda: calls.append(1), warmup=2, k=5)
+    assert isinstance(m, Measurement)
+    assert len(calls) == 7  # warmup included
+    assert m.k == 5 and len(m.times_us) == 5
+    assert m.times_us == tuple(sorted(m.times_us))
+    assert m.median_us == m.times_us[2]
+    assert m.spread_us >= 0.0
+
+
+def test_time_fn_wraps_measure():
+    from benchmarks.common import time_fn
+    assert time_fn(lambda: 1 + 1, iters=2) > 0.0
+
+
+# -- signatures --------------------------------------------------------------
+
+def test_signature_buckets_and_roundtrip():
+    a = signature(1800, 1700, 16, 16, density=0.011, backend="sspnna",
+                  block_n=8)
+    b = signature(2048, 1025, 16, 16, density=0.02, backend="sspnna",
+                  block_n=8)
+    # row counts bucket to powers of two, densities to log-spaced bins
+    assert a == b
+    assert a.group() == signature(1100, 1030, 16, 16, density=0.015)
+    assert ShapeSig.decode(a.encode()) == a
+    with pytest.raises(ValueError):
+        ShapeSig.decode("1:2:3")
+    assert density_bin(0.0) == 0 and density_bin(1.0) == len(
+        (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1))
+    for b_ in range(9):
+        assert density_bin(_bin_density(b_)) == b_
+
+
+# -- persistence -------------------------------------------------------------
+
+def _filled_table():
+    t = CostTable(fingerprint="test-rig")
+    t.record(signature(500, 500, 8, 8, density=0.05, backend="reference"),
+             100.0, k=3)
+    t.record(signature(500, 500, 8, 8, density=0.05, backend="sspnna"),
+             50.0, delta_o=32, delta_i=123, k=3)
+    return t
+
+
+def test_cache_round_trip(tmp_path):
+    t = _filled_table()
+    path = t.save(str(tmp_path / "sub" / "autotune.json"))
+    back = CostTable.load(path, fingerprint="test-rig")
+    assert back.load_status == "ok"
+    assert len(back) == len(t) == 2
+    assert back.generation == t.generation
+    best = back.best(signature(512, 512, 8, 8, density=0.05))
+    assert best.sig.backend == "sspnna"
+    assert (best.delta_o, best.delta_i) == (32, 123)
+
+
+def test_cache_missing_and_corrupt(tmp_path):
+    missing = CostTable.load(str(tmp_path / "nope.json"), fingerprint="x")
+    assert missing.load_status == "missing" and len(missing) == 0
+
+    bad = tmp_path / "bad.json"
+    bad.write_text("{truncated")
+    t = CostTable.load(str(bad), fingerprint="x")
+    assert t.load_status == "corrupt" and len(t) == 0
+
+    # valid JSON, garbled entries: also falls back to an empty table
+    payload = _filled_table().to_payload()
+    payload["entries"][0]["sig"] = "not-a-sig"
+    bad.write_text(json.dumps(payload))
+    t = CostTable.load(str(bad), fingerprint="test-rig")
+    assert t.load_status == "corrupt" and len(t) == 0
+
+
+def test_cache_version_and_fingerprint_mismatch(tmp_path):
+    src = _filled_table()
+    path = src.save(str(tmp_path / "autotune.json"))
+
+    t = CostTable.load(path, fingerprint="another-machine")
+    assert t.load_status == "fingerprint-mismatch" and len(t) == 0
+
+    payload = json.loads(open(path).read())
+    payload["plan_version"] = -999
+    open(path, "w").write(json.dumps(payload))
+    t = CostTable.load(path, fingerprint="test-rig")
+    assert t.load_status == "version-mismatch" and len(t) == 0
+
+    payload["plan_version"] = -999
+    payload["schema"] = "something-else"
+    open(path, "w").write(json.dumps(payload))
+    t = CostTable.load(path, fingerprint="test-rig")
+    assert t.load_status == "version-mismatch" and len(t) == 0
+
+
+def test_env_override_cache_path(monkeypatch, tmp_path):
+    from repro.engine.autotune import default_cache_path
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "x.json"))
+    assert default_cache_path() == str(tmp_path / "x.json")
+    assert _filled_table().save() == str(tmp_path / "x.json")
+
+
+# -- dispatch consult --------------------------------------------------------
+
+def test_adjust_dispatch_cold_is_identity_and_records_miss():
+    t = CostTable(fingerprint="f")
+    analytical = Dispatch("sspnna", "CIRF", "OS", 32, 123, 4)
+    out = t.adjust_dispatch(analytical, n_in=500, n_out=500, c_in=8,
+                            c_out=8, density=0.05)
+    assert out is analytical  # bitwise-identical: the very same object
+    assert t.miss_count == 1
+    (gk, m), = t.hottest_misses()
+    assert (m["delta_o"], m["delta_i"], m["backend"]) == (32, 123, "sspnna")
+
+
+def test_adjust_dispatch_flips_both_ways():
+    t = CostTable(fingerprint="f")
+    t.record(signature(500, 500, 8, 8, density=0.05, backend="reference"),
+             50.0)
+    t.record(signature(500, 500, 8, 8, density=0.05, backend="sspnna"),
+             100.0, delta_o=32, delta_i=123)
+    analytical = Dispatch("sspnna", "CIRF", "OS", 32, 123, 4)
+    out = t.adjust_dispatch(analytical, n_in=500, n_out=500, c_in=8,
+                            c_out=8, density=0.05)
+    assert out == REFERENCE_DISPATCH  # measured: reference wins
+
+    # flip the measurement: sspnna now cheaper -> reference flips to tiled
+    t.record(signature(500, 500, 8, 8, density=0.05, backend="sspnna"),
+             10.0, delta_o=16, delta_i=64)
+    out = t.adjust_dispatch(REFERENCE_DISPATCH, n_in=500, n_out=500,
+                            c_in=8, c_out=8, density=0.05)
+    assert out.backend == "sspnna"
+    assert (out.delta_o, out.delta_i) == (16, 64)
+
+    # same-backend win with a measured block_n: adopted when unpinned
+    t2 = CostTable(fingerprint="f")
+    t2.record(signature(500, 500, 8, 8, density=0.05, backend="sspnna",
+                        block_n=8), 10.0, delta_o=16, delta_i=64)
+    got = t2.adjust_dispatch(analytical, n_in=500, n_out=500, c_in=8,
+                             c_out=8, density=0.05)
+    assert got.block_n == 8 and got.backend == "sspnna"
+
+
+def test_winner_flip_bumps_generation_and_invalidates_plan_cache():
+    t = CostTable(fingerprint="f")
+    ctx = engine.ExecutionContext(autotune=t)
+    ctx.plan_cache._plans["k"] = {"host": None, "device": None}
+    r0 = repr(t)
+    sig_r = signature(500, 500, 8, 8, density=0.05, backend="reference")
+    sig_s = signature(500, 500, 8, 8, density=0.05, backend="sspnna")
+    assert t.record(sig_r, 100.0) is False  # first entry, no prior miss
+    assert ctx.plan_cache.invalidations == 0
+    assert t.record(sig_s, 50.0) is True    # winner flips
+    assert t.generation == 1 and repr(t) != r0
+    assert ctx.plan_cache.invalidations == 1
+    assert len(ctx.plan_cache._plans) == 0
+    # cheaper same-winner sample: no flip, no invalidation
+    assert t.record(sig_s, 40.0) is False
+    assert ctx.plan_cache.invalidations == 1
+
+
+def test_first_measurement_after_miss_counts_as_flip():
+    t = CostTable(fingerprint="f")
+    d = t.adjust_dispatch(REFERENCE_DISPATCH, n_in=500, n_out=500, c_in=8,
+                          c_out=8, density=0.05)
+    assert d == REFERENCE_DISPATCH and t.miss_count == 1
+    flipped = t.record(
+        signature(500, 500, 8, 8, density=0.05, backend="reference"), 9.0)
+    assert flipped is True  # plans were built on the analytical fallback
+    assert t.miss_count == 0
+
+
+# -- plan-build integration --------------------------------------------------
+
+def test_cold_table_builds_bitwise_identical_plans(setup):
+    cfg, params, t = setup
+    table = CostTable(fingerprint="f")
+    p0 = engine.build_scene_plan_host(t, cfg, mem_budget=BUDGET)
+    p1 = engine.build_scene_plan_host(t, cfg, mem_budget=BUDGET,
+                                      autotune=table)
+    l0 = jax.tree_util.tree_leaves(p0)
+    l1 = jax.tree_util.tree_leaves(p1)
+    assert len(l0) == len(l1)
+    for a, b in zip(l0, l1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [lvl.sub.dispatch for lvl in p0.levels] == \
+           [lvl.sub.dispatch for lvl in p1.levels]
+    assert table.miss_count > 0  # the consults were recorded
+
+    s0 = engine.build_plan_spec([t], cfg, mem_budget=BUDGET)
+    s1 = engine.build_plan_spec([t], cfg, mem_budget=BUDGET, autotune=table)
+    assert s0 == s1
+
+
+def test_measured_winner_redirects_adaptive_build(setup):
+    cfg, params, t = setup
+    table = CostTable(fingerprint="f")
+    base = engine.build_scene_plan_host(t, cfg, mem_budget=BUDGET)
+    assert any(lvl.sub.dispatch.backend == "sspnna" for lvl in base.levels)
+    # measure "reference" as the across-the-board winner for every level
+    for li, lvl in enumerate(base.levels):
+        n = int(np.asarray(lvl.mask).sum())
+        den = n / float(max(cfg.resolution >> li, 1)) ** 3
+        c = cfg.widths[li]
+        table.record(signature(n, n, c, c, density=den,
+                               backend="reference"), 1.0)
+        table.record(signature(n, n, c, c, density=den, backend="sspnna"),
+                     100.0, delta_o=32, delta_i=123)
+    tuned = engine.build_scene_plan_host(t, cfg, mem_budget=BUDGET,
+                                         autotune=table)
+    assert all(lvl.sub.dispatch.backend == "reference"
+               for lvl in tuned.levels)
+    assert all(lvl.sub.tiles is None for lvl in tuned.levels)
+    assert table.hits >= len(tuned.levels)
+    # and the tuned plan still computes the same conv
+    ref = engine.apply_unet(params, t.feats,
+                            engine.upload_scene_plan(base),
+                            backend="reference")
+    got = engine.apply_unet(params, t.feats,
+                            engine.upload_scene_plan(tuned),
+                            backend="auto")
+    m = np.asarray(t.mask)
+    np.testing.assert_allclose(np.asarray(got)[m], np.asarray(ref)[m],
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- profiling ---------------------------------------------------------------
+
+def test_measure_backends_walks_registry(setup):
+    cfg, params, t = setup
+    plan = engine.build_scene_plan(t, cfg, mem_budget=BUDGET)
+    lvl = next(lvl for lvl in plan.levels
+               if lvl.sub.dispatch.backend == "sspnna")
+    times = measure_backends(lvl.sub, t.feats, params["stem"], k=1)
+    assert set(times) >= {"reference", "sspnna"}
+    assert all(m.median_us > 0 for m in times.values())
+
+
+def test_profile_group_resolves_miss():
+    table = CostTable(fingerprint="f")
+    sig = signature(256, 256, 8, 8, density=0.05)
+    table.note_miss(sig, delta_o=32, delta_i=123, backend="sspnna")
+    results = profile_group(table, sig, delta_o=32, delta_i=123, k=1)
+    assert set(results) >= {"reference", "sspnna"}
+    assert table.miss_count == 0 and len(table) >= 2
+    assert table.best(sig) is not None
+
+
+def test_profile_group_unsynthesizable_drops_miss():
+    table = CostTable(fingerprint="f")
+    sig = ShapeSig(0, 0, 8, 8, 27, 3)  # zero rows: cannot be realized
+    table.note_miss(sig)
+    assert profile_group(table, sig) == {}
+    assert table.miss_count == 0 and len(table) == 0
+
+
+def test_reprofile_budget_gates():
+    table = CostTable(fingerprint="f")
+    table.note_miss(signature(256, 256, 8, 8, density=0.05),
+                    delta_o=32, delta_i=123)
+    assert reprofile(table, budget_ms=0.0) == 0  # off by default
+    assert table.miss_count == 1
+    done = reprofile(table, budget_ms=60_000.0, max_sigs=1, k=1)
+    assert done == 1
+    assert table.miss_count == 0 and len(table) >= 2
+
+
+# -- serving idle-gap hook ---------------------------------------------------
+
+def test_scene_engine_idle_hook_reprofiles(setup):
+    cfg, params, t = setup
+    table = CostTable(fingerprint="f")
+    table.note_miss(signature(256, 256, 8, 8, density=0.05),
+                    delta_o=32, delta_i=123, backend="sspnna")
+    ctx = engine.ExecutionContext(autotune=table,
+                                  autotune_reprofile_ms=60_000.0)
+    eng = SceneEngine(cfg, params, batch=1, ctx=ctx)
+    try:
+        eng.submit([SceneRequest(0, t)])
+        eng.serve()
+    finally:
+        eng.close()
+    assert eng.scheduler.idle_ticks >= 1
+    assert table.miss_count == 0 and len(table) >= 2  # profiled in the gap
+
+
+def test_scene_engine_default_installs_no_idle_hook(setup):
+    cfg, params, t = setup
+    # budget 0 (the default): no hook, even with a table on the context
+    ctx = engine.ExecutionContext(autotune=CostTable(fingerprint="f"))
+    eng = SceneEngine(cfg, params, batch=1, ctx=ctx)
+    try:
+        assert eng.scheduler.on_idle is None
+    finally:
+        eng.close()
+    eng2 = SceneEngine(cfg, params, batch=1)
+    try:
+        assert eng2.scheduler.on_idle is None
+    finally:
+        eng2.close()
+
+
+# -- seeding from bench artifacts -------------------------------------------
+
+def test_seed_cost_table(tmp_path):
+    rows = [
+        # canonical: bench_dispatch row with an explicit sig token
+        {"name": "dispatch/r16_c8_reference", "us_per_call": 1000.0,
+         "derived": "sig=512:512:8:8:27:7:reference:0 delta_o=128 "
+                    "delta_i=225 spread_us=3.0"},
+        # bench_sspnna sweep rows: fused -> sspnna, xla -> reference
+        {"name": "sspnna/r24_c16_fused", "us_per_call": 900.0,
+         "derived": "density=0.0750 T=12 alive=9 dO=32 dI=128 C=16 N=16 "
+                    "modeled_hbm_mb=0.50"},
+        {"name": "sspnna/r24_c16_xla", "us_per_call": 400.0,
+         "derived": "density=0.0750 T=12 alive=9 dO=32 dI=128 C=16 N=16 "
+                    "modeled_hbm_mb=0.75"},
+        # skipped: no engine backend corresponds to the pre-gathered arm
+        {"name": "sspnna/r24_c16_pregathered", "us_per_call": 1800.0,
+         "derived": "density=0.0750 dO=32 dI=128 C=16 N=16"},
+        # skipped: analytical row
+        {"name": "tableIII/L2-like/uops_saving", "us_per_call": 0.0,
+         "derived": "512x"},
+    ]
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps({"schema": "bench-rows/v1", "rows": rows}))
+    table = CostTable(fingerprint="f")
+    n = seed_cost_table(table, [str(art), str(tmp_path / "missing.json")])
+    assert n == 3 and len(table) == 3
+    # the sspnna sweep rows land in one group; xla (reference) wins it
+    n_active = round(0.075 * 24 ** 3)
+    best = table.best(signature(n_active, n_active, 16, 16, density=0.075))
+    assert best.sig.backend == "reference"
+    d = table.adjust_dispatch(
+        Dispatch("sspnna", "CIRF", "OS", 32, 128, 4),
+        n_in=n_active, n_out=n_active, c_in=16, c_out=16, density=0.075)
+    assert d == REFERENCE_DISPATCH
+
+
+# -- moved block_n sweep -----------------------------------------------------
+
+def test_autotune_block_n_moved_to_engine():
+    bn = autotune_block_n(4, 8, 4, 16, n_tiles=2, iters=1)
+    assert 8 % bn == 0 or bn == 8
+
+
+def test_benchmarks_common_shim_warns():
+    import benchmarks.common as common
+    with pytest.warns(DeprecationWarning, match="deprecated.*repro.engine"):
+        bn = common.autotune_block_n(4, 8, 4, 16, n_tiles=2, iters=1)
+    assert 8 % bn == 0 or bn == 8

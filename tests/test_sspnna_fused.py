@@ -372,7 +372,7 @@ def test_block_n_autotune_pins_dispatch(rng):
 
 
 def test_autotune_block_n_returns_divisor():
-    from benchmarks.common import autotune_block_n
+    from repro.engine.autotune import autotune_block_n
 
     bn = autotune_block_n(8, 16, 8, 32, n_tiles=2, iters=1)
     assert 16 % bn == 0 and bn >= 8
