@@ -1,0 +1,119 @@
+"""Goodput under injected dispatch faults: graceful vs cliff degradation.
+
+Measures what the fault-tolerant runtime is *for*: as the injected
+dispatch fault rate rises, a contained engine (retry budget + bisection +
+backoff) should lose goodput roughly in proportion to the retry work —
+never fall off a cliff, never lose a request. One arm per fault rate
+serves the same scene traffic through a hardened ``SceneEngine``
+(``AdmissionPolicy(max_retries=2)``) with a seeded
+``FaultPlan(dispatch @ rate)``; rows report goodput, p50/p99 latency,
+terminal failures and retries charged. The final row asserts the
+non-cliff property: ``goodput(rate) >= goodput(0) * (1 - 8 * rate)``.
+
+Standalone CLI (what the CI chaos job runs):
+
+    python -m benchmarks.bench_faults --quick --json BENCH_faults.json
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, standalone_bench_main
+from repro.data.scenes import N_CLASSES, make_scene
+from repro.models.scn import UNetConfig, init_unet
+from repro.serving import (
+    AdmissionPolicy,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    RequestShedError,
+)
+from repro.serving.scene_engine import SceneEngine, SceneRequest
+from repro.sparse.tensor import SparseVoxelTensor
+
+RES, CAP = 16, 1024
+
+
+def _scene(seed):
+    coords, feats, _, mask = make_scene(seed, resolution=RES, capacity=CAP)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+def _serve_arm(cfg, params, scenes, n_requests, rate):
+    faults = None
+    if rate > 0.0:
+        faults = FaultInjector(FaultPlan(seed=7, specs=(
+            FaultSpec("dispatch", rate=rate),)))
+    eng = SceneEngine(cfg, params, batch=2, sync=True, faults=faults,
+                      policy=AdmissionPolicy(max_retries=2,
+                                             retry_backoff_ms=1.0))
+    handles = [eng.submit(SceneRequest(i, scenes[i % len(scenes)]))
+               for i in range(n_requests)]
+    eng.serve()
+    # conservation is part of the product contract, so the bench enforces
+    # it too: every request ends completed or failed, none lost
+    n_done = n_failed = 0
+    for h in handles:
+        try:
+            h.result()
+            n_done += 1
+        except RequestShedError:  # also catches RequestFailedError
+            n_failed += 1
+    assert n_done + n_failed == n_requests, "requests lost under faults"
+    slo = eng.slo_stats()
+    assert slo["n_completed"] == n_done and slo["n_failed"] == n_failed
+    eng.close()
+    return slo
+
+
+def run(quick: bool = False):
+    rates = (0.0, 0.05) if quick else (0.0, 0.01, 0.05, 0.10)
+    n_requests = 80 if quick else 240
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    scenes = [_scene(100 + i) for i in range(6)]  # cycled: plan-cache hits
+
+    # warm the jit signature outside the timed arms
+    warm = SceneEngine(cfg, params, batch=2, sync=True)
+    warm.submit([SceneRequest(i, scenes[i]) for i in range(2)])
+    warm.serve()
+    warm.close()
+
+    results = {}
+    for rate in rates:
+        slo = _serve_arm(cfg, params, scenes, n_requests, rate)
+        results[rate] = slo
+        emit(f"faults/goodput@{rate:.2f}", slo["p99_ms"] * 1e3,
+             f"goodput={slo['goodput_frac']:.3f} "
+             f"p50={slo['p50_ms']:.1f}ms p99={slo['p99_ms']:.1f}ms "
+             f"completed={slo['n_completed']}/{n_requests} "
+             f"failed={slo['n_failed']} retries={slo['n_retries']} "
+             f"wave_errors={slo['wave_errors']}")
+
+    base = results[0.0]["goodput_frac"]
+    worst_margin = 1.0
+    for rate in rates[1:]:
+        floor = base * (1.0 - 8.0 * rate)
+        got = results[rate]["goodput_frac"]
+        assert got >= floor, (
+            f"cliff at rate {rate}: goodput {got:.3f} < floor {floor:.3f}")
+        worst_margin = min(worst_margin, got - floor)
+    top = rates[-1]
+    emit("faults/degradation", 0.0,
+         f"goodput {base:.3f} -> {results[top]['goodput_frac']:.3f} at "
+         f"{top:.0%} dispatch faults (non-cliff floor held, worst margin "
+         f"{worst_margin:.3f}); p99 {results[0.0]['p99_ms']:.1f}ms -> "
+         f"{results[top]['p99_ms']:.1f}ms")
+
+
+def main(argv=None) -> None:
+    standalone_bench_main(run, "bench_faults",
+                          "2 fault rates / 80 requests (the CI chaos job)",
+                          description=__doc__, argv=argv)
+
+
+if __name__ == "__main__":
+    main()

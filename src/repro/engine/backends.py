@@ -21,14 +21,234 @@ TPU-tuned kernels) meant editing the dispatcher. Now the seam is explicit:
 ``Dispatch``/SPADE emit backend *names*; nothing in the planner or the
 dispatcher enumerates implementations, so a new backend registers from
 anywhere (``engine.register_backend``) and is immediately routable.
+
+**Circuit breakers.** Every registry carries a :class:`BreakerBoard`
+(``registry.breakers``): per-backend :class:`CircuitBreaker` state
+machines fed by the serving layer (``N`` consecutive dispatch failures
+attributed to a backend trip it OPEN). A tripped breaker makes the
+*planner* reroute new plans along the backend's declared ``fallback``
+chain (``BreakerBoard.route``) — rerouting must happen at plan-build
+time, not at ``resolve()`` time, because ``resolve`` runs inside jit
+traces and its answer is baked into the compiled call. Each state change
+bumps the board's ``generation``, which the plan-cache key mixes in (via
+the board's ``repr``), so cached plans built for the old routing rotate
+out; a hook (wired by ``ExecutionContext``) also invalidates the cache
+eagerly. After ``cooldown_s`` the breaker goes HALF_OPEN and lets one
+probe plan through; a success closes it, a failure re-opens it.
 """
 from __future__ import annotations
+
+import threading
+import time
 
 from repro.core.sparse_conv import reference_conv_cirf
 from repro.engine.plan import REFERENCE, SSPNNA, ConvPlan
 from repro.kernels.sspnna.ops import run_sspnna_conv
 
 AUTO = "auto"
+
+
+def _fault_injector():
+    """The ambient serving-layer fault injector, if any (lazy import so
+    the engine layer has no hard dependency on serving)."""
+    try:
+        from repro.serving import faults
+    except ImportError:  # pragma: no cover - serving always ships
+        return None
+    return faults.active()
+
+
+# breaker states
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """Per-backend consecutive-failure circuit breaker.
+
+    CLOSED counts consecutive failures; at ``failure_threshold`` it trips
+    OPEN (the board stops routing plans to the backend). After
+    ``cooldown_s`` the next ``allow()`` moves it HALF_OPEN, admitting one
+    probe: ``record_success`` closes it again, ``record_failure``
+    re-opens it (and restarts the cooldown). ``clock`` is injectable for
+    tests. Not thread-safe on its own — :class:`BreakerBoard` serializes
+    access.
+    """
+
+    def __init__(self, name: str, *, failure_threshold: int = 5,
+                 cooldown_s: float = 1.0, clock=time.monotonic):
+        if failure_threshold < 1:
+            raise ValueError(
+                f"failure_threshold must be >= 1, got {failure_threshold}")
+        self.name = name
+        self.failure_threshold = failure_threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self.state = CLOSED
+        self.consecutive_failures = 0
+        self.trips = 0           # total CLOSED/HALF_OPEN -> OPEN transitions
+        self._opened_at: float | None = None
+
+    def allow(self) -> bool:
+        """May a *new plan* route to this backend right now? OPEN flips
+        to HALF_OPEN (one probe allowed) once the cooldown has passed."""
+        if self.state == OPEN:
+            if (self._opened_at is not None
+                    and self._clock() - self._opened_at >= self.cooldown_s):
+                self.state = HALF_OPEN
+                return True
+            return False
+        return True
+
+    def record_failure(self) -> bool:
+        """Count one attributed failure; returns True when the breaker
+        state changed (tripped or re-opened)."""
+        self.consecutive_failures += 1
+        if self.state == HALF_OPEN or (
+                self.state == CLOSED
+                and self.consecutive_failures >= self.failure_threshold):
+            self.state = OPEN
+            self.trips += 1
+            self._opened_at = self._clock()
+            return True
+        return False
+
+    def record_success(self) -> bool:
+        """Count one success; returns True when the state changed (a
+        HALF_OPEN probe succeeded and the breaker closed)."""
+        self.consecutive_failures = 0
+        if self.state == HALF_OPEN:
+            self.state = CLOSED
+            self._opened_at = None
+            return True
+        return False
+
+    def snapshot(self) -> dict:
+        return {"state": self.state,
+                "consecutive_failures": self.consecutive_failures,
+                "trips": self.trips}
+
+    def __repr__(self):
+        return (f"<CircuitBreaker {self.name!r} {self.state} "
+                f"fails={self.consecutive_failures}>")
+
+
+class BreakerBoard:
+    """All circuit breakers of one registry, plus the routing logic.
+
+    ``record_failure``/``record_success`` are fed by the serving layer
+    with backend *names* (lazily creating breakers on first failure).
+    ``route(name)`` is consulted by the planner: it follows the
+    registry's fallback chain past backends whose breaker is not
+    ``allow()``-ing traffic. Every state change bumps ``generation`` —
+    mixed into plan-cache keys through ``repr(board)`` — and fires the
+    registered hooks (``ExecutionContext`` wires
+    ``plan_cache.invalidate`` here).
+    """
+
+    def __init__(self, registry: "BackendRegistry", *,
+                 failure_threshold: int = 5, cooldown_s: float = 1.0,
+                 clock=time.monotonic):
+        self._registry = registry
+        self.failure_threshold = failure_threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self.generation = 0
+        self._breakers: dict[str, CircuitBreaker] = {}
+        self._hooks: list = []
+        self._lock = threading.RLock()
+
+    def configure(self, *, failure_threshold: int | None = None,
+                  cooldown_s: float | None = None) -> "BreakerBoard":
+        """Adjust defaults for breakers created after this call."""
+        with self._lock:
+            if failure_threshold is not None:
+                self.failure_threshold = failure_threshold
+            if cooldown_s is not None:
+                self.cooldown_s = cooldown_s
+        return self
+
+    def add_hook(self, hook) -> None:
+        """``hook()`` fires (outside the lock) on every generation bump."""
+        self._hooks.append(hook)
+
+    def breaker(self, name: str) -> CircuitBreaker:
+        with self._lock:
+            br = self._breakers.get(name)
+            if br is None:
+                br = CircuitBreaker(
+                    name, failure_threshold=self.failure_threshold,
+                    cooldown_s=self.cooldown_s, clock=self._clock)
+                self._breakers[name] = br
+            return br
+
+    def _bump(self) -> None:
+        for hook in list(self._hooks):
+            try:
+                hook()
+            except Exception:
+                pass  # observers must not take down serving
+
+    def record_failure(self, name: str) -> bool:
+        """Attribute one failure to ``name``; True if its breaker state
+        changed (hooks fire and the generation bumps)."""
+        with self._lock:
+            changed = self.breaker(name).record_failure()
+            if changed:
+                self.generation += 1
+        if changed:
+            self._bump()
+        return changed
+
+    def record_success(self, name: str) -> bool:
+        with self._lock:
+            br = self._breakers.get(name)
+            changed = br.record_success() if br is not None else False
+            if changed:
+                self.generation += 1
+        if changed:
+            self._bump()
+        return changed
+
+    def allow(self, name: str) -> bool:
+        """True unless ``name`` has a tripped (still-cooling) breaker.
+        Doesn't create breakers: unknown names are allowed."""
+        with self._lock:
+            br = self._breakers.get(name)
+            return True if br is None else br.allow()
+
+    def route(self, name: str) -> str:
+        """The backend new plans should target: ``name`` itself when its
+        breaker admits traffic, else the first allowed backend along the
+        registry's fallback chain (cycle-safe; the chain's last resort is
+        returned even when itself blocked — something must serve)."""
+        with self._lock:
+            seen = set()
+            current = name
+            while current not in seen:
+                seen.add(current)
+                br = self._breakers.get(current)
+                if br is None or br.allow():
+                    return current
+                try:
+                    impl = self._registry.get(current)
+                except ValueError:
+                    return current
+                if impl.fallback is None:
+                    return current
+                current = impl.fallback
+            return current
+
+    def states(self) -> dict:
+        """Snapshot for ``health()``: name -> breaker state dict."""
+        with self._lock:
+            return {n: b.snapshot() for n, b in self._breakers.items()}
+
+    def __repr__(self):
+        # repr participates in plan-cache keys: the generation is the
+        # only state that must rotate them
+        return f"<BreakerBoard gen={self.generation}>"
 
 
 class Backend:
@@ -81,6 +301,9 @@ class BackendRegistry:
     def __init__(self, parent: "BackendRegistry | None" = None):
         self._impls: dict[str, Backend] = {}
         self._parent = parent
+        #: per-registry circuit breakers (views get their own board, so
+        #: a context's breaker trips stay scoped to that context)
+        self.breakers = BreakerBoard(self)
 
     def register(self, name: str, impl: Backend, *,
                  overwrite: bool = False) -> Backend:
@@ -141,6 +364,9 @@ class BackendRegistry:
         """
         if backend == AUTO:
             backend = plan.dispatch.backend
+        inj = _fault_injector()
+        if inj is not None:
+            inj.maybe_fail("backend_resolve", key=backend)
         impl = self.get(backend)  # raises ValueError on unknown names
         seen = {backend}
         while not impl.supports(plan):

@@ -71,6 +71,14 @@ class ExecutionContext:
         hook = getattr(self.autotune, "add_flip_hook", None)
         if hook is not None:
             hook(self.plan_cache.invalidate)
+        # same invariant for circuit breakers: a breaker trip reroutes new
+        # plan builds (engine.plan consults registry.breakers), so plans
+        # cached under the old routing must rotate out — the board's
+        # generation is repr'd into keys AND the cache is invalidated
+        # eagerly on every breaker state change
+        board = getattr(self.registry, "breakers", None)
+        if board is not None:
+            board.add_hook(self.plan_cache.invalidate)
 
     @property
     def n_shards(self) -> int:

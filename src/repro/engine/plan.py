@@ -55,8 +55,20 @@ _K_SUB = 27  # submanifold 3^3 kernel volume
 # expecting the new one. v2: TileArrays carries DMA-table-layout rows plus
 # pair_counts for the fused kernel's dead-tile skip. v3: keys additionally
 # carry the execution topology (mesh axes + shard layout), so a plan built
-# for one mesh can never be served to another.
-_PLAN_VERSION = 3
+# for one mesh can never be served to another. v4: plan builds may consult
+# circuit breakers (``breakers=`` build_kw, whose repr carries the board
+# generation) and reroute dispatch away from tripped backends.
+_PLAN_VERSION = 4
+
+
+def _fault_injector():
+    """The ambient serving-layer fault injector, if any (lazy import so
+    the engine layer has no hard dependency on serving)."""
+    try:
+        from repro.serving import faults
+    except ImportError:  # pragma: no cover - serving always ships
+        return None
+    return faults.active()
 
 
 @dataclass(frozen=True)
@@ -286,9 +298,11 @@ class PlanCache:
     ``device=False`` the host plan, so an async pipeline can run the heavy
     numpy pass in a worker thread and defer the upload to dispatch time.
 
-    If a build raises, the key is released and every waiter retries the
-    build itself (raising the same error for deterministic failures) — a
-    poisoned scene never wedges the cache.
+    If a build raises, the key is released and the failure propagates to
+    every waiter coalesced on it (each raises the builder's exception
+    instead of silently re-building); callers arriving *after* the
+    failure start a fresh build — a poisoned scene never wedges the
+    cache, and a transient failure never poisons the key.
 
     ``max_entries`` bounds the number of cached entries with LRU eviction
     (host *and* memoized device copies go together, so a long-running
@@ -304,7 +318,9 @@ class PlanCache:
         if self.max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._plans: OrderedDict[str, dict] = OrderedDict()
-        self._building: dict[str, threading.Event] = {}
+        # key -> {"ev": Event, "error": BaseException | None}; the error
+        # is set before the event so coalesced waiters see the failure
+        self._building: dict[str, dict] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -372,20 +388,31 @@ class PlanCache:
                     self.hits += 1
                     self._plans.move_to_end(key)
                 else:
-                    ev = self._building.get(key)
-                    if ev is None:  # this thread builds
-                        ev = threading.Event()
-                        self._building[key] = ev
+                    rec = self._building.get(key)
+                    if rec is None:  # this thread builds
+                        rec = {"ev": threading.Event(), "error": None}
+                        self._building[key] = rec
                         break
             if entry is not None:
                 return self._resolve(entry, device)
-            ev.wait()  # another thread is building this plan; re-check
+            rec["ev"].wait()  # another thread is building this plan
+            err = rec["error"]
+            if err is not None:
+                # the build we coalesced onto failed: every waiter gets
+                # the builder's exception (a caller arriving after the
+                # key was released starts a fresh build instead)
+                raise err
+            # build landed: loop re-checks the cache
         try:
+            inj = _fault_injector()
+            if inj is not None:
+                inj.maybe_fail("plan_build", key=key)
             host = builder(t, cfg, **build_kw)
-        except BaseException:
+        except BaseException as e:
             with self._lock:
                 self._building.pop(key, None)
-            ev.set()
+            rec["error"] = e
+            rec["ev"].set()
             raise
         entry = {"host": host, "device": None, "dev_lock": threading.Lock()}
         with self._lock:
@@ -394,7 +421,7 @@ class PlanCache:
             while len(self._plans) > self.max_entries:
                 self._plans.popitem(last=False)
             self._building.pop(key, None)
-            ev.set()
+            rec["ev"].set()
         return self._resolve(entry, device)
 
     def adopt(self, key: str, host_plan: ScenePlan, *,
@@ -637,6 +664,7 @@ def build_scene_plan_host(
     order: str = "soar",
     soar_chunk: int = 512,
     autotune=None,
+    breakers=None,
 ) -> ScenePlan:
     """Host half of ``build_scene_plan``: all array leaves are numpy.
 
@@ -645,11 +673,15 @@ def build_scene_plan_host(
     pair with ``upload_scene_plan``. Safe to call from planner threads.
     ``autotune`` (a measured ``engine.autotune.CostTable``) overrides
     adaptive-mode dispatch decisions with measured winners; see
-    ``build_plan_spec``.
+    ``build_plan_spec``. ``breakers`` (a ``backends.BreakerBoard``)
+    reroutes dispatch away from backends whose circuit breaker is open —
+    its repr (carrying the board generation) participates in plan-cache
+    keys, so routing changes rotate cached plans.
     """
     plan = _build_scene_plan(t, cfg, spec=spec, plan_tiles=plan_tiles,
                              mem_budget=mem_budget, order=order,
-                             soar_chunk=soar_chunk, autotune=autotune)
+                             soar_chunk=soar_chunk, autotune=autotune,
+                             breakers=breakers)
     return _map_leaves(plan, np.asarray)
 
 
@@ -663,6 +695,7 @@ def build_scene_plan(
     order: str = "soar",
     soar_chunk: int = 512,
     autotune=None,
+    breakers=None,
 ) -> ScenePlan:
     """One AdMAC + SOAR + SPADE pass -> a device-ready ScenePlan.
 
@@ -673,7 +706,8 @@ def build_scene_plan(
     """
     return upload_scene_plan(build_scene_plan_host(
         t, cfg, spec=spec, plan_tiles=plan_tiles, mem_budget=mem_budget,
-        order=order, soar_chunk=soar_chunk, autotune=autotune))
+        order=order, soar_chunk=soar_chunk, autotune=autotune,
+        breakers=breakers))
 
 
 def _build_scene_plan(
@@ -686,6 +720,7 @@ def _build_scene_plan(
     order: str = "soar",
     soar_chunk: int = 512,
     autotune=None,
+    breakers=None,
 ) -> ScenePlan:
     if spec is not None and len(spec.levels) != len(cfg.widths):
         raise ValueError(
@@ -712,7 +747,7 @@ def _build_scene_plan(
         sub, info = _assemble_level(
             sub_coir, coords, mask, li, cfg, spec=spec, plan_tiles=plan_tiles,
             mem_budget=mem_budget, order=order, soar_chunk=soar_chunk,
-            autotune=autotune)
+            autotune=autotune, breakers=breakers)
         stats.append(info)
         levels.append(LevelPlan(coords, mask, sub, down, up))
     return ScenePlan(tuple(levels), stats)
@@ -731,6 +766,7 @@ def _assemble_level(
     order: str,
     soar_chunk: int,
     autotune=None,
+    breakers=None,
 ) -> tuple[ConvPlan, dict]:
     """Dispatch/ordering/tile assembly for one level's submanifold conv.
 
@@ -765,6 +801,19 @@ def _assemble_level(
                     c_in=cfg.widths[li], c_out=cfg.widths[li],
                     density=n_active / res3, kernel_volume=_K_SUB)
                 info["autotuned"] = dispatch.backend
+        if breakers is not None and dispatch.backend != REFERENCE:
+            # circuit-breaker consult: a tripped backend routes new plans
+            # along its fallback chain. This happens at *build* time (not
+            # resolve time) so the rerouted Dispatch lands in the plan's
+            # treedef and the jitted call actually changes.
+            routed = breakers.route(dispatch.backend)
+            if routed != dispatch.backend:
+                info["breaker_rerouted"] = (dispatch.backend, routed)
+                dispatch = (REFERENCE_DISPATCH if routed == REFERENCE
+                            else Dispatch(routed, dispatch.flavor,
+                                          dispatch.walk, dispatch.delta_o,
+                                          dispatch.delta_i, dispatch.n_tiles,
+                                          dispatch.block_n))
         if dispatch.backend == SSPNNA:
             if spec is not None:
                 ordering = _order_rows(sub_coir, coords, mask, order,

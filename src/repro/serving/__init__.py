@@ -10,19 +10,34 @@ plan/dispatch/drain pipeline and per-wave timing; ``serving.engine``
 (LM prefill+decode) and ``serving.scene_engine`` (batched sparse-conv
 U-Net) plug their stage callbacks into it. The engine submodules are
 imported lazily by callers to keep ``import repro.serving`` light.
+
+``serving.faults`` is the deterministic fault-injection layer
+(``FaultPlan``/``FaultInjector``); the scheduler, plan cache and backend
+registry expose named seams it can fire, and the hardened runtime
+(retry budgets, circuit breakers, ``serve_forever()``) contains
+everything it can inject.
 """
 from repro.serving.api import (
     COMPLETED,
+    FAILED,
     QUEUED,
     RUNNING,
     SHED,
     AdmissionPolicy,
+    RequestFailedError,
     RequestHandle,
     RequestShedError,
     ServeRequest,
     ServingBase,
 )
-from repro.serving.scheduler import WaveScheduler, WaveStats
+from repro.serving.faults import (
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    inject_faults,
+)
+from repro.serving.scheduler import StageTimeout, WaveScheduler, WaveStats
 
 # scene-engine surface (incl. the streaming API) is re-exported lazily so
 # `import repro.serving` stays light (no jax import on the fast path)
@@ -39,18 +54,26 @@ def __getattr__(name: str):
 
 __all__ = [
     "COMPLETED",
+    "FAILED",
     "QUEUED",
     "RUNNING",
     "SHED",
     "AdmissionPolicy",
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "RequestFailedError",
     "RequestHandle",
     "RequestShedError",
     "SceneEngine",
     "SceneRequest",
     "ServeRequest",
     "ServingBase",
+    "StageTimeout",
     "StreamFrameRequest",
     "StreamHandle",
     "WaveScheduler",
     "WaveStats",
+    "inject_faults",
 ]

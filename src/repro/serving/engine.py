@@ -82,7 +82,8 @@ class Engine(ServingBase):
                  max_new: int, eos: int | None = None, *,
                  sync: bool = True, depth: int = 2,
                  planner_threads: int = 2,
-                 policy: AdmissionPolicy | None = None):
+                 policy: AdmissionPolicy | None = None,
+                 faults=None):
         self.cfg, self.params = cfg, params
         self.batch, self.prompt_len, self.max_new = batch, prompt_len, max_new
         self.eos = eos
@@ -91,7 +92,7 @@ class Engine(ServingBase):
         self.scheduler = WaveScheduler(
             batch=batch, plan=self._plan_stage, dispatch=self._dispatch_stage,
             drain=self._drain_stage, sync=sync, depth=depth,
-            planner_threads=planner_threads, policy=policy)
+            planner_threads=planner_threads, policy=policy, faults=faults)
 
     # -- pipeline stages -----------------------------------------------------
 

@@ -83,6 +83,7 @@ from repro.core.host_meta import pack_stream_frame_np
 from repro.engine import api as engine_api
 from repro.engine.context import ExecutionContext
 from repro.engine.plan import (
+    REFERENCE,
     PlanCache,
     PlanSpec,
     SignatureFamily,
@@ -199,7 +200,8 @@ class SceneEngine(ServingBase):
                  plan_cache_size: int | None = None,
                  order: str = "soar", soar_chunk: int = 512,
                  sync: bool | None = None, depth: int | None = None,
-                 planner_threads: int | None = None):
+                 planner_threads: int | None = None,
+                 faults=None):
         if ctx is None:
             ctx = ExecutionContext(
                 plan_cache=PlanCache(plan_cache_size or 128))
@@ -212,6 +214,10 @@ class SceneEngine(ServingBase):
         self.cache = ctx.plan_cache
         self._topology = ctx.topology_key()
         self._plan_sig = None  # sharded mode: pinned wave plan signature
+        #: the context registry's circuit breakers; dispatch failures feed
+        #: them (via the scheduler's on_wave_error) and plan builds consult
+        #: them, so a failing backend reroutes to its fallback
+        self._breakers = getattr(ctx.registry, "breakers", None)
         if policy is None:
             policy = ctx.admission
         if family is not None:
@@ -236,6 +242,9 @@ class SceneEngine(ServingBase):
             if getattr(ctx, "autotune", None) is not None:
                 for kw in self._bucket_kw.values():
                     kw["autotune"] = ctx.autotune
+            if self._breakers is not None:
+                for kw in self._bucket_kw.values():
+                    kw["breakers"] = self._breakers
             self._builder = None
         elif layout is not None:
             if spec is not None:
@@ -264,6 +273,10 @@ class SceneEngine(ServingBase):
                 # a measured-winner flip rotates keys (and the flip hook
                 # clears entries) — cached plans never outlive the decision
                 self._plan_kw["autotune"] = ctx.autotune
+            if self._breakers is not None:
+                # same invariant for breaker routing: the board's repr
+                # carries its generation, so a trip/close rotates keys
+                self._plan_kw["breakers"] = self._breakers
             self._builder = None  # PlanCache default (build_scene_plan_host)
         self._streams: dict[str, StreamHandle] = {}
         self.scheduler = WaveScheduler(
@@ -277,7 +290,9 @@ class SceneEngine(ServingBase):
             bucket_of=((lambda r: getattr(r, "_bucket", None))
                        if family is not None else None),
             on_shed=self._on_shed,
-            on_idle=self._make_idle_hook(ctx))
+            on_idle=self._make_idle_hook(ctx),
+            faults=faults,
+            on_wave_error=self._on_wave_error)
 
         if layout is not None:
             def sharded_apply(params, feats, plan):
@@ -425,13 +440,26 @@ class SceneEngine(ServingBase):
         are re-packed into the stream's canonical row layout here so
         dispatch stays a plain upload."""
         if isinstance(req, StreamFrameRequest):
+            scene = req.scene
+            inj = self.scheduler.faults
+            if inj is not None:
+                # corrupt-frame seam: scribble garbage over the frame's
+                # coords before planning — exercises the stream's
+                # gap/rebuild recovery (and plan-stage containment when
+                # the corruption makes the build raise)
+                coords = np.asarray(scene.coords)
+                corrupted = inj.corrupt_coords(coords, rid=req.rid)
+                if corrupted is not coords:
+                    scene = SparseVoxelTensor(
+                        jnp.asarray(corrupted), scene.feats, scene.mask)
             state = req.stream.state
             key, plan, frame_rows, info = state.plan_frame(
-                req.scene, req.frame_no, req.ego_shift)
+                scene, req.frame_no, req.ego_shift)
             req.plan_info = info
             req._frame_rows = frame_rows
+            req._backends = self._plan_backends(plan)
             feats = pack_stream_frame_np(frame_rows,
-                                         np.asarray(req.scene.feats))
+                                         np.asarray(scene.feats))
             return "stream", key, plan, feats, state
         if self.family is not None:
             cap = req._bucket
@@ -445,9 +473,39 @@ class SceneEngine(ServingBase):
         plan = self.cache.get_or_build(scene, cfg, device=False,
                                        key=key, builder=self._builder,
                                        **plan_kw)
+        req._backends = self._plan_backends(plan)
         if self.family is not None:
             return key, plan, scene.feats  # re-packed feats (numpy)
         return key, plan
+
+    @staticmethod
+    def _plan_backends(plan) -> tuple:
+        """Non-reference backends this plan dispatches to — the circuit
+        breakers a failure of the request's wave is attributed to (when
+        the exception itself doesn't name one)."""
+        names = set()
+        for info in getattr(plan, "stats", None) or ():
+            d = info.get("dispatch") if isinstance(info, dict) else None
+            name = getattr(d, "backend", None)
+            if name is not None and name != REFERENCE:
+                names.add(name)
+        return tuple(sorted(names))
+
+    def _on_wave_error(self, exc, reqs, stage: str) -> None:
+        """Contained-wave-failure observer (scheduler ``on_wave_error``):
+        attribute dispatch/drain failures to backend circuit breakers —
+        the exception's ``backend`` attribute when it names one (e.g. an
+        injected ``DeviceFaultError``), else every non-reference backend
+        the wave's plans dispatch to."""
+        board = self._breakers
+        if board is None or stage not in ("dispatch", "drain"):
+            return
+        name = getattr(exc, "backend", None)
+        names = ((name,) if name else
+                 sorted({b for r in reqs
+                         for b in getattr(r, "_backends", ())}))
+        for n in names:
+            board.record_failure(n)
 
     def _dispatch_stage(self, reqs: list[SceneRequest], payloads, stats):
         # the plan stage built (and counted) these host plans; adopt fetches
@@ -545,3 +603,13 @@ class SceneEngine(ServingBase):
                 r.logits = logits[i]
             r.pred = r.logits.argmax(-1)
             r.done = True
+        if self._breakers is not None:
+            # a drained wave is a success for every backend it exercised:
+            # closes HALF_OPEN probes and resets consecutive-failure counts
+            for n in sorted({b for r in reqs
+                             for b in getattr(r, "_backends", ())}):
+                self._breakers.record_success(n)
+
+    def _health_extra(self) -> dict:
+        board = self._breakers
+        return {"breakers": board.states() if board is not None else {}}

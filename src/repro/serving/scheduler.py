@@ -49,6 +49,28 @@ admitted but uncompleted request at the front of the queue (in-flight
 device waves are drained first), so a poisoned wave neither deadlocks the
 pipeline nor drops requests.
 
+**Failure containment.** With ``AdmissionPolicy.max_retries > 0`` the
+scheduler *contains* stage failures instead of propagating them:
+
+* a failed multi-request wave is **bisected** — every member's wave cap is
+  halved and the wave re-queued, so within ``log2(batch)`` rounds a single
+  poisoned request is isolated into a solo wave without charging its
+  innocent wave-mates a retry;
+* a failed **solo** wave charges the request one retry; past the budget it
+  lands terminally on ``scheduler.failed`` with ``status="failed"`` /
+  ``shed_reason="error"`` (counted by ``slo_stats()`` under
+  ``shed_by_reason["error"]``), otherwise it backs off exponentially
+  (``retry_backoff_ms * 2**(n-1)``) before re-admission;
+* ``stage_timeout_s`` arms a watchdog on the plan and dispatch stages —
+  a hung stage raises :class:`StageTimeout`, which is contained like any
+  other stage error;
+* injected :class:`~repro.serving.faults.WorkerDeath` (a BaseException,
+  simulating a dying worker thread) is contained too; real
+  ``KeyboardInterrupt``/``SystemExit`` still propagate.
+
+With ``max_retries == 0`` (the default) the legacy requeue-and-raise
+behavior is preserved exactly.
+
 Per-wave ``WaveStats`` make the overlap *and* the admission measurable:
 ``plan_ms`` is the host plan work (summed over requests), ``plan_span_ms``
 its wall-clock span, ``plan_wait_ms`` the span remainder the dispatcher
@@ -65,13 +87,21 @@ import time
 from collections import deque
 from collections.abc import Callable, Mapping, Sequence
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
 from dataclasses import dataclass, field
+
+from repro.serving.faults import WorkerDeath
 
 # request lifecycle states (mirrored by serving.api.ServeRequest.status)
 QUEUED = "queued"
 RUNNING = "running"
 COMPLETED = "completed"
 SHED = "shed"
+FAILED = "failed"
+
+
+class StageTimeout(RuntimeError):
+    """A plan/dispatch stage exceeded ``AdmissionPolicy.stage_timeout_s``."""
 
 
 def overlap_fraction(plan_span_ms: float, plan_wait_ms: float) -> float:
@@ -96,12 +126,22 @@ class AdmissionPolicy:
     ``tenant_weights`` drive stride-scheduled weighted fairness between
     tenants (missing tenants get ``default_weight``); a tenant with twice
     the weight gets twice the admitted share under contention.
+
+    ``max_retries`` caps how many times a *solo* failed wave is retried
+    before the request fails terminally (``status="failed"``,
+    ``shed_reason="error"``); 0 (the default) preserves the legacy
+    requeue-and-raise behavior. ``retry_backoff_ms`` is the base of the
+    exponential backoff between retries. ``stage_timeout_s`` arms a
+    watchdog on the plan and dispatch stages (None disables it).
     """
 
     max_queue: int | None = None
     shed_expired: bool = True
     tenant_weights: Mapping[str, float] | None = None
     default_weight: float = 1.0
+    max_retries: int = 0
+    retry_backoff_ms: float = 10.0
+    stage_timeout_s: float | None = None
 
     def weight(self, tenant: str) -> float:
         w = (self.tenant_weights or {}).get(tenant, self.default_weight)
@@ -171,6 +211,8 @@ class WaveScheduler:
         bucket_of: Callable | None = None,
         on_shed: Callable | None = None,
         on_idle: Callable | None = None,
+        faults=None,
+        on_wave_error: Callable | None = None,
     ):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -194,11 +236,27 @@ class WaveScheduler:
         #: re-profiler here when the context opts in with a budget)
         self.on_idle = on_idle
         self.idle_ticks = 0
+        #: optional FaultInjector (serving.faults) exercising the plan /
+        #: dispatch / slow-wave / worker-death seams; None = zero cost
+        self.faults = faults
+        #: optional observer called as ``on_wave_error(exc, reqs, stage)``
+        #: whenever a wave fails in contained mode (the scene engine feeds
+        #: backend circuit breakers from here)
+        self.on_wave_error = on_wave_error
         self._plan, self._dispatch, self._drain = plan, dispatch, drain
         self.queue: deque = deque()
         self.completed: list = []
         self.shed: list = []
+        self.failed: list = []
         self.stats: list[WaveStats] = []
+        self.retries_charged = 0   # total solo-wave retries granted
+        self.wave_errors = 0       # total contained wave failures
+        self.last_wave_ts: float | None = None  # monotonic, last _finish
+        #: set by ServingBase.serve_forever: a resident thread owns run(),
+        #: so RequestHandle.result() must wait instead of driving
+        self.resident = False
+        #: signals the resident serving thread that work arrived
+        self._work = threading.Event()
         #: mode of the run in progress (stages may consult it to trade
         #: host syncs for pipelining); None outside ``run``
         self.running_sync: bool | None = None
@@ -236,6 +294,7 @@ class WaveScheduler:
             self.shed_request(r, "overload")
             return r
         self.queue.append(r)
+        self._work.set()
         return r
 
     def submit(self, reqs: Sequence) -> None:
@@ -265,7 +324,7 @@ class WaveScheduler:
             r.status = status
         except (AttributeError, TypeError):
             return
-        if status in (COMPLETED, SHED):
+        if status in (COMPLETED, SHED, FAILED):
             try:
                 r.done_ts = _now_ms()
             except (AttributeError, TypeError):
@@ -284,6 +343,22 @@ class WaveScheduler:
             pass
         self._set_status(r, SHED)
         self.shed.append(r)
+        if self.on_shed is not None:
+            self.on_shed(r)
+
+    def fail_request(self, r, exc) -> None:
+        """Terminally fail ``r`` (retry budget exhausted): surfaced on
+        ``self.failed`` with ``status="failed"`` / ``shed_reason="error"``
+        and the causing exception on ``r.error``; the completion event
+        fires so waiters wake (``RequestHandle.result()`` raises
+        ``RequestFailedError``)."""
+        try:
+            r.error = exc
+            r.shed_reason = "error"
+        except (AttributeError, TypeError):
+            pass
+        self._set_status(r, FAILED)
+        self.failed.append(r)
         if self.on_shed is not None:
             self.on_shed(r)
 
@@ -358,34 +433,52 @@ class WaveScheduler:
             return reqs
         now = _now_ms()
         n_shed = 0
-        pending: list = []
+        keep: list = []     # survivors, original queue order
+        pending: list = []  # survivors that are also ready (not backing off)
+        next_ready: float | None = None
         for r in self.queue:
             if (self.policy is not None and self.policy.shed_expired
                     and self._expired(r, now)):
                 self.shed_request(r, "deadline")
                 n_shed += 1
+                continue
+            keep.append(r)
+            nb = getattr(r, "_not_before", None)
+            if nb is not None and nb > now:
+                # retry backoff: stays queued but is not a candidate yet
+                next_ready = nb if next_ready is None else min(next_ready, nb)
             else:
                 pending.append(r)
         admitted: list = []
         bucket = None
+        limit = self.batch
         avail = list(pending)
-        while avail and len(admitted) < self.batch:
-            best = min(self._stream_heads(avail), key=self._admit_key)
+        while avail and len(admitted) < limit:
+            # bisection wave caps: a request whose cap is already filled
+            # waits for a later (smaller) wave
+            cands = [r for r in self._stream_heads(avail)
+                     if (getattr(r, "_wave_cap", None) or self.batch)
+                     > len(admitted)]
+            if not cands:
+                break
+            best = min(cands, key=self._admit_key)
             if not admitted and self.bucket_of is not None:
                 # first pick fixes the wave's signature bucket; everything
                 # incompatible waits for a later wave instead of blocking
                 bucket = self.bucket_of(best)
                 avail = [r for r in avail
                          if self.bucket_of(r) == bucket]
+            limit = min(limit, getattr(best, "_wave_cap", None) or self.batch)
             admitted.append(best)
             avail.remove(best)
             self._charge_tenant(best)
             self._set_status(best, RUNNING)
         admitted_ids = {id(r) for r in admitted}
         self.queue.clear()
-        self.queue.extend(r for r in pending if id(r) not in admitted_ids)
+        self.queue.extend(r for r in keep if id(r) not in admitted_ids)
         self._admit_info = dict(queue_depth=depth0, n_shed=n_shed,
-                                bucket=bucket, n_admitted=len(admitted))
+                                bucket=bucket, n_admitted=len(admitted),
+                                next_ready_ms=next_ready)
         return admitted
 
     def _requeue(self, waves: list[list]) -> None:
@@ -394,6 +487,98 @@ class WaveScheduler:
         for r in pending:
             self._set_status(r, QUEUED)
         self.queue.extendleft(reversed(pending))
+        if pending:
+            self._work.set()
+
+    # -- failure containment -------------------------------------------------
+
+    @property
+    def _contained(self) -> bool:
+        """True when stage failures are handled in-loop (retry budgets,
+        bisection) instead of the legacy requeue-and-raise."""
+        pol = self.policy
+        return pol is not None and pol.max_retries > 0
+
+    @staticmethod
+    def _containable(exc) -> bool:
+        """Which exceptions containment may swallow: every ``Exception``
+        plus the injected ``WorkerDeath`` BaseException — but never a real
+        ``KeyboardInterrupt`` / ``SystemExit``."""
+        return isinstance(exc, (Exception, WorkerDeath))
+
+    def _handle_wave_failure(self, reqs: list, exc, stage: str) -> None:
+        """Contained-mode response to a failed wave: bisect multi-request
+        waves (halve every member's wave cap, requeue), charge solo waves
+        a retry with exponential backoff, and fail terminally past the
+        budget. Innocent wave-mates are never charged a retry — only a
+        solo failure is attributable to its request."""
+        self.wave_errors += 1
+        if self.on_wave_error is not None:
+            try:
+                self.on_wave_error(exc, reqs, stage)
+            except Exception:
+                pass  # observers must not take down containment
+        if len(reqs) > 1:
+            for r in reqs:
+                cap = getattr(r, "_wave_cap", None) or self.batch
+                try:
+                    r._wave_cap = max(1, cap // 2)
+                except (AttributeError, TypeError):
+                    pass
+            self._requeue([reqs])
+            return
+        r = reqs[0]
+        n = getattr(r, "retries", 0) + 1
+        try:
+            r.retries = n
+            r.error = exc
+        except (AttributeError, TypeError):
+            pass
+        self.retries_charged += 1
+        pol = self.policy
+        if n > pol.max_retries:
+            self.fail_request(r, exc)
+            return
+        backoff = pol.retry_backoff_ms * (2.0 ** (n - 1))
+        try:
+            r._not_before = _now_ms() + backoff
+        except (AttributeError, TypeError):
+            pass
+        self._requeue([reqs])
+
+    def _idle_wait(self) -> None:
+        """Sleep briefly when the queue holds only backing-off requests,
+        so the run loop doesn't spin while waiting out a retry backoff."""
+        ready = self._admit_info.get("next_ready_ms")
+        delay_s = 0.001 if ready is None \
+            else max(0.0, (ready - _now_ms()) / 1e3)
+        time.sleep(min(delay_s, 0.05) + 1e-4)
+
+    def _with_timeout(self, fn, args, budget_s, stage: str):
+        """Watchdog: run ``fn(*args)`` bounded by ``budget_s``. The stage
+        runs on a daemon thread so a genuine hang is abandoned (the thread
+        leaks until it returns — the price of a watchdog in-process) and
+        :class:`StageTimeout` is raised for containment to handle."""
+        if budget_s is None:
+            return fn(*args)
+        box: dict = {}
+
+        def _target():
+            try:
+                box["result"] = fn(*args)
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                box["error"] = e
+
+        t = threading.Thread(target=_target, daemon=True,
+                             name=f"wave-watchdog-{stage}")
+        t.start()
+        t.join(budget_s)
+        if t.is_alive():
+            raise StageTimeout(
+                f"{stage} stage exceeded {budget_s:.3f}s watchdog")
+        if "error" in box:
+            raise box["error"]
+        return box["result"]
 
     def _new_stats(self, reqs: list, sync: bool) -> WaveStats:
         info = self._admit_info
@@ -408,6 +593,7 @@ class WaveScheduler:
 
     def _finish(self, reqs: list, st: WaveStats) -> None:
         self.stats.append(st)
+        self.last_wave_ts = time.monotonic()
         for r in reqs:
             self._set_status(r, COMPLETED)
         self.completed.extend(reqs)
@@ -444,10 +630,10 @@ class WaveScheduler:
                 met += 1
         lats.sort()
         shed_by_reason: dict[str, int] = {}
-        for r in self.shed:
+        for r in list(self.shed) + list(self.failed):
             reason = getattr(r, "shed_reason", None) or "unknown"
             shed_by_reason[reason] = shed_by_reason.get(reason, 0) + 1
-        n_total = len(self.completed) + len(self.shed)
+        n_total = len(self.completed) + len(self.shed) + len(self.failed)
         ts = [getattr(r, "submit_ts", None) for r in self.completed]
         te = [getattr(r, "done_ts", None) for r in self.completed]
         ts = [t for t in ts if t is not None]
@@ -456,6 +642,9 @@ class WaveScheduler:
         return {
             "n_completed": len(self.completed),
             "n_shed": len(self.shed),
+            "n_failed": len(self.failed),
+            "n_retries": self.retries_charged,
+            "wave_errors": self.wave_errors,
             "shed_by_reason": shed_by_reason,
             "p50_ms": _percentile(lats, 0.50),
             "p99_ms": _percentile(lats, 0.99),
@@ -494,33 +683,60 @@ class WaveScheduler:
 
     def _timed_plan(self, req):
         t0 = _now_ms()
+        inj = self.faults
+        if inj is not None:
+            rid = getattr(req, "rid", None)
+            inj.maybe_fail("worker_death", rid=rid)
+            inj.maybe_fail("plan", rid=rid)
         payload = self._plan(req)
         return payload, t0, _now_ms()
 
+    def _dispatch_with_faults(self, reqs, payloads, st):
+        inj = self.faults
+        if inj is not None:
+            stall = inj.stall_ms(key=("wave", st.wave))
+            if stall > 0:
+                time.sleep(stall / 1e3)
+            inj.maybe_fail("dispatch", key=("wave", st.wave))
+        return self._dispatch(reqs, payloads, st)
+
     def _run_sync(self, max_waves: int | None = None) -> None:
         waves_left = max_waves if max_waves is not None else float("inf")
+        budget = self.policy.stage_timeout_s if self.policy is not None \
+            else None
         while self.queue and waves_left > 0:
             reqs = self._admit()
-            if not reqs:  # admission shed everything: no wave, no dispatch
+            if not reqs:  # everything shed, or every request backing off
+                if self.queue:
+                    self._idle_wait()
                 continue
             waves_left -= 1
             st = self._new_stats(reqs, sync=True)
+            stage = "plan"
             try:
                 payloads = []
                 for r in reqs:
-                    payload, t0, t1 = self._timed_plan(r)
+                    payload, t0, t1 = self._with_timeout(
+                        self._timed_plan, (r,), budget, "plan")
                     payloads.append(payload)
                     st.plan_ms += t1 - t0
                 st.plan_span_ms = st.plan_ms   # serial builds
                 st.plan_wait_ms = st.plan_span_ms  # nothing hidden in sync
+                stage = "dispatch"
                 t_disp = _now_ms()
-                handle = self._dispatch(reqs, payloads, st)
+                handle = self._with_timeout(
+                    self._dispatch_with_faults, (reqs, payloads, st),
+                    budget, "dispatch")
                 st.dispatch_ms = _now_ms() - t_disp
+                stage = "drain"
                 t_drain = _now_ms()
                 self._drain(reqs, handle)
                 st.drain_ms = _now_ms() - t_drain
                 st.device_ms = _now_ms() - t_disp
-            except BaseException:
+            except BaseException as e:
+                if self._contained and self._containable(e):
+                    self._handle_wave_failure(reqs, e, stage)
+                    continue
                 self._requeue([reqs])
                 raise
             self._finish(reqs, st)
@@ -547,21 +763,41 @@ class WaveScheduler:
         if pool is not None:
             pool.shutdown(wait=True)
 
+    @staticmethod
+    def _settle(futs) -> None:
+        """Cancel-or-wait every future so no planner thread is still
+        mutating a request we are about to requeue; stage errors of an
+        already-failed wave are deliberately swallowed here."""
+        for f in futs:
+            if f.cancel():
+                continue
+            try:
+                f.result()
+            except BaseException:  # noqa: BLE001 - wave already handled
+                pass
+
     def _run_async(self, max_waves: int | None = None) -> None:
         pool = self._pool_or_start()
         waves_left = max_waves if max_waves is not None else float("inf")
+        contained = self._contained
+        budget = self.policy.stage_timeout_s if self.policy is not None \
+            else None
         planned: deque = deque()   # (reqs, stats, [plan futures])
         inflight: deque = deque()  # (reqs, stats, handle, t_dispatched)
         failed: list = []          # requests of the wave that blew up
         futs: list = []            # plan futures of the wave being gathered
         try:
             while (self.queue and waves_left > 0) or planned or inflight:
+                progressed = False
                 # keep up to `depth` waves in the plan stage
                 while (self.queue and waves_left > 0
                        and len(planned) < self.depth):
                     reqs = self._admit()
-                    if not reqs:  # everything shed: nothing to plan
-                        continue
+                    if not reqs:
+                        # shedding emptied the queue, or every queued
+                        # request is backing off — don't spin the fill loop
+                        break
+                    progressed = True
                     waves_left -= 1
                     failed = reqs  # cover the gap until safely planned
                     st = self._new_stats(reqs, sync=False)
@@ -573,23 +809,39 @@ class WaveScheduler:
                 # *remaining* plan time — the hidden part ran while the
                 # previous wave was executing on the device)
                 if planned:
+                    progressed = True
                     reqs, st, futs = planned.popleft()
                     failed = reqs
-                    t_gather = _now_ms()
-                    payloads, starts, ends = [], [], []
-                    for f in futs:
-                        payload, t0, t1 = f.result()
-                        payloads.append(payload)
-                        st.plan_ms += t1 - t0
-                        starts.append(t0)
-                        ends.append(t1)
-                    if ends:
-                        st.plan_span_ms = max(ends) - min(starts)
-                    st.plan_wait_ms = _now_ms() - t_gather
-                    t_disp = _now_ms()
-                    handle = self._dispatch(reqs, payloads, st)
-                    st.dispatch_ms = _now_ms() - t_disp
-                    inflight.append((reqs, st, handle, t_disp))
+                    stage = "plan"
+                    try:
+                        t_gather = _now_ms()
+                        payloads, starts, ends = [], [], []
+                        for f in futs:
+                            try:
+                                payload, t0, t1 = f.result(timeout=budget)
+                            except (_FutureTimeout, TimeoutError) as te:
+                                raise StageTimeout(
+                                    f"plan stage exceeded {budget:.3f}s "
+                                    f"watchdog") from te
+                            payloads.append(payload)
+                            st.plan_ms += t1 - t0
+                            starts.append(t0)
+                            ends.append(t1)
+                        if ends:
+                            st.plan_span_ms = max(ends) - min(starts)
+                        st.plan_wait_ms = _now_ms() - t_gather
+                        stage = "dispatch"
+                        t_disp = _now_ms()
+                        handle = self._with_timeout(
+                            self._dispatch_with_faults, (reqs, payloads, st),
+                            budget, "dispatch")
+                        st.dispatch_ms = _now_ms() - t_disp
+                        inflight.append((reqs, st, handle, t_disp))
+                    except BaseException as e:
+                        if not (contained and self._containable(e)):
+                            raise
+                        self._settle(futs)
+                        self._handle_wave_failure(reqs, e, stage)
                     failed = []
                     futs = []
                 # drain once the device pipeline is `depth` deep, or
@@ -597,10 +849,20 @@ class WaveScheduler:
                 while inflight and (
                         len(inflight) >= self.depth
                         or not ((self.queue and waves_left > 0) or planned)):
+                    progressed = True
                     item = inflight.popleft()
                     failed = item[0]
-                    self._drain_one(item)
+                    try:
+                        self._drain_one(item)
+                    except BaseException as e:
+                        if not (contained and self._containable(e)):
+                            raise
+                        self._handle_wave_failure(item[0], e, "drain")
                     failed = []
+                if not progressed:
+                    # queue holds only backing-off requests: wait out the
+                    # shortest backoff instead of spinning
+                    self._idle_wait()
         except BaseException:
             # salvage device work already in flight, then put every
             # unfinished request back so nothing is dropped; cancel queued

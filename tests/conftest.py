@@ -12,6 +12,25 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--chaos-seeds", default="0..1", metavar="SPEC",
+        help="fault-injection seeds for the chaos matrix "
+             "(tests/test_faults.py): 'a..b' inclusive range or a comma "
+             "list, e.g. '0..4' or '3,7,11'")
+
+
+def pytest_generate_tests(metafunc):
+    if "chaos_seed" in metafunc.fixturenames:
+        spec = metafunc.config.getoption("--chaos-seeds")
+        if ".." in spec:
+            lo, hi = spec.split("..", 1)
+            seeds = list(range(int(lo), int(hi) + 1))
+        else:
+            seeds = [int(s) for s in spec.split(",") if s.strip()]
+        metafunc.parametrize("chaos_seed", seeds)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,774 @@
+"""Fault-tolerant serving runtime, exercised through seeded injection.
+
+The contract under test: with ``AdmissionPolicy.max_retries > 0`` the
+serving stack *contains* every fault ``serving.faults`` can inject —
+requests end in exactly one terminal state (completed / shed / failed),
+nothing is lost or duplicated, wave-mates of a poisoned request are never
+charged its retries (bisection isolates the poison first), dispatch
+failures attributed to a backend trip its circuit breaker so new plans
+reroute along the fallback chain, and a fault-free hardened engine is
+bitwise identical to the legacy one. ``--chaos-seeds`` widens the random
+fault-plan matrix (the CI chaos job runs seeds 0..4).
+"""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic local shim
+    from _hypothesis_mini import given, settings, strategies as st
+
+from repro.engine.backends import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    Backend,
+    BackendRegistry,
+    BreakerBoard,
+    CircuitBreaker,
+    default_registry,
+)
+from repro.serving.api import (
+    AdmissionPolicy,
+    RequestFailedError,
+    RequestShedError,
+    ServeRequest,
+    ServingBase,
+)
+from repro.serving.faults import (
+    DeviceFaultError,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    PlanFaultError,
+    WorkerDeath,
+    active,
+    inject_faults,
+)
+from repro.serving.scheduler import StageTimeout, WaveScheduler
+
+
+# -- stub engine -------------------------------------------------------------
+
+
+class _StubEngine(ServingBase):
+    """Tiny ServingBase over trivial stages: plan returns the rid, drain
+    writes ``r.out = rid * 10`` (so cross-wave contamination is visible).
+    ``fail_rids`` poisons dispatch permanently; ``flaky`` maps rid -> how
+    many dispatch attempts fail before succeeding."""
+
+    def __init__(self, batch=2, *, policy=None, faults=None, sync=True,
+                 fail_rids=(), flaky=None, dispatch_sleep=None, **kw):
+        self.fail_rids = set(fail_rids)
+        self.flaky = dict(flaky or {})
+        self.dispatch_sleep = dispatch_sleep or {}
+        self._attempts: dict[int, int] = {}
+        self.scheduler = WaveScheduler(
+            batch=batch, plan=self._plan, dispatch=self._dispatch,
+            drain=self._drain, sync=sync, policy=policy, faults=faults, **kw)
+
+    def _plan(self, r):
+        return r.rid
+
+    def _dispatch(self, reqs, payloads, stats):
+        for r in reqs:
+            n = self._attempts.get(r.rid, 0)
+            self._attempts[r.rid] = n + 1
+            sleep = self.dispatch_sleep.get(r.rid)
+            if sleep is not None:
+                time.sleep(sleep)
+            if r.rid in self.fail_rids:
+                raise RuntimeError(f"poisoned rid {r.rid}")
+            if n < self.flaky.get(r.rid, 0):
+                raise RuntimeError(f"transient rid {r.rid} attempt {n}")
+        return payloads
+
+    def _drain(self, reqs, payloads):
+        for r, p in zip(reqs, payloads):
+            r.out = p * 10
+
+
+def _conserved(eng, rids):
+    """Every submitted rid lands in exactly one terminal bucket."""
+    sched = eng.scheduler
+    done = [r.rid for r in sched.completed]
+    failed = [r.rid for r in sched.failed]
+    shed = [r.rid for r in sched.shed]
+    everything = done + failed + shed
+    assert sorted(everything) == sorted(rids)  # no loss, no duplication
+    assert not sched.queue
+    for r in sched.completed:
+        assert r.out == r.rid * 10  # results match their request
+    return set(done), set(failed), set(shed)
+
+
+# -- injector ----------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("no_such_seam", rate=0.5)
+    with pytest.raises(ValueError):
+        FaultSpec("dispatch", rate=1.5)
+    FaultSpec("dispatch", rate=0.0)  # bounds are inclusive
+
+
+def test_injector_deterministic_and_order_independent():
+    plan = FaultPlan(seed=11, specs=(FaultSpec("plan", rate=0.5),))
+
+    def fires(keys):
+        inj = FaultInjector(plan)
+        out = []
+        for k in keys:
+            try:
+                inj.maybe_fail("plan", rid=k)
+                out.append((k, False))
+            except PlanFaultError:
+                out.append((k, True))
+        return out
+
+    keys = list(range(20))
+    a = fires(keys)
+    b = fires(keys)
+    assert a == b and any(f for _, f in a) and not all(f for _, f in a)
+    # rolls are keyed, not sequenced: visiting the keys in another order
+    # gives each key the same outcome
+    shuffled = fires(keys[::-1])
+    assert dict(shuffled) == dict(a)
+    # ...and the Nth attempt at one key re-rolls (retries aren't sticky)
+    inj = FaultInjector(FaultPlan(seed=3, specs=(FaultSpec("plan", rate=0.5),)))
+    outcomes = []
+    for _ in range(32):
+        try:
+            inj.maybe_fail("plan", rid=7)
+            outcomes.append(False)
+        except PlanFaultError:
+            outcomes.append(True)
+    assert True in outcomes and False in outcomes
+
+
+def test_injector_targeting_gates():
+    # rids: only the targeted request can fire
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("dispatch", rate=1.0, rids=(3,)),)))
+    inj.maybe_fail("dispatch", rid=2)
+    with pytest.raises(DeviceFaultError):
+        inj.maybe_fail("dispatch", rid=3)
+    # max_fires: bounded injections; after: skips early opportunities
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("plan", rate=1.0, max_fires=2, after=1),)))
+    hits = 0
+    for k in range(6):
+        try:
+            inj.maybe_fail("plan", rid=k)
+        except PlanFaultError:
+            hits += 1
+    assert hits == 2
+    assert inj.stats()["fires"]["plan"] == 2
+    assert inj.stats()["opportunities"]["plan"] == 6
+
+
+def test_corrupt_coords_identity_when_cold():
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("corrupt_frame", rate=1.0, rids=(1,)),)))
+    coords = np.arange(24, dtype=np.int32).reshape(8, 3)
+    same = inj.corrupt_coords(coords, rid=0)  # untargeted: same object back
+    assert same is coords
+    bad = inj.corrupt_coords(coords, rid=1)
+    assert bad is not coords and bad.shape == coords.shape
+    assert not np.array_equal(bad, coords)
+    np.testing.assert_array_equal(coords,
+                                  np.arange(24, dtype=np.int32).reshape(8, 3))
+
+
+def test_ambient_injector_crosses_threads():
+    assert active() is None
+    inj = FaultInjector(FaultPlan())
+    seen = []
+    with inject_faults(inj):
+        t = threading.Thread(target=lambda: seen.append(active()))
+        t.start()
+        t.join()
+    assert seen == [inj]  # module global, visible from worker threads
+    assert active() is None
+
+
+def test_backend_resolve_seam_fires():
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("backend_resolve", rate=1.0),)))
+    plan = types.SimpleNamespace()  # reference has no plan requirements
+    with inject_faults(inj):
+        with pytest.raises(DeviceFaultError):
+            default_registry().resolve(plan, "reference")
+    assert default_registry().resolve(plan, "reference") == "reference"
+
+
+# -- retry budgets / containment (stub scheduler) ----------------------------
+
+
+@pytest.mark.parametrize("sync", [True, False])
+def test_retry_budget_terminal_failure(sync):
+    eng = _StubEngine(batch=2, sync=sync, fail_rids={3},
+                      policy=AdmissionPolicy(max_retries=2,
+                                             retry_backoff_ms=1.0))
+    handles = eng.submit([ServeRequest(i) for i in range(6)])
+    eng.serve()
+    done, failed, shed = _conserved(eng, range(6))
+    assert done == {0, 1, 2, 4, 5} and failed == {3} and not shed
+    bad = eng.failed[0]
+    assert bad.status == "failed" and bad.shed_reason == "error"
+    assert bad.retries == 3  # charged to the budget, then one final strike
+    assert isinstance(bad.error, RuntimeError)
+    slo = eng.slo_stats()
+    assert slo["shed_by_reason"] == {"error": 1}
+    assert slo["n_failed"] == 1 and slo["n_retries"] == 3
+    assert slo["wave_errors"] >= 3
+    # the handle surfaces the terminal failure as a typed error that old
+    # `except RequestShedError` call sites still catch
+    h3 = next(h for h in handles if h.request.rid == 3)
+    assert h3.done()
+    with pytest.raises(RequestFailedError, match="failed after 3 retries"):
+        h3.result()
+    assert issubclass(RequestFailedError, RequestShedError)
+    eng.close()
+
+
+def test_bisection_spares_wave_mates():
+    # batch 4: rid 2's poison first fails waves holding innocents — they
+    # must complete with zero retries charged
+    eng = _StubEngine(batch=4, fail_rids={2},
+                      policy=AdmissionPolicy(max_retries=1,
+                                             retry_backoff_ms=1.0))
+    eng.submit([ServeRequest(i) for i in range(8)])
+    eng.serve()
+    done, failed, _ = _conserved(eng, range(8))
+    assert failed == {2} and done == set(range(8)) - {2}
+    for r in eng.scheduler.completed:
+        assert r.retries == 0  # innocents never charged
+    assert eng.failed[0].retries == 2
+    eng.close()
+
+
+def test_retry_backoff_is_exponential_waiting():
+    eng = _StubEngine(batch=1, flaky={0: 2},
+                      policy=AdmissionPolicy(max_retries=3,
+                                             retry_backoff_ms=40.0))
+    eng.submit(ServeRequest(0))
+    t0 = time.perf_counter()
+    eng.serve()
+    elapsed = time.perf_counter() - t0
+    done, failed, _ = _conserved(eng, [0])
+    assert done == {0} and not failed
+    assert eng.scheduler.completed[0].retries == 2
+    assert elapsed >= 0.10  # 40ms + 80ms backoff actually waited out
+    eng.close()
+
+
+def test_legacy_mode_still_requeues_and_raises():
+    # max_retries=0 (the default): the pre-hardening contract is intact
+    eng = _StubEngine(batch=2, fail_rids={1})
+    eng.submit([ServeRequest(i) for i in range(4)])
+    with pytest.raises(RuntimeError, match="poisoned rid 1"):
+        eng.serve()
+    assert not eng.scheduler.failed
+    queued = [r.rid for r in eng.scheduler.queue]
+    done = [r.rid for r in eng.scheduler.completed]
+    assert sorted(done + queued) == [0, 1, 2, 3]  # nothing dropped
+    assert 1 in queued
+    eng.close()
+
+
+@pytest.mark.parametrize("sync", [True, False])
+def test_worker_death_contained_only_with_budget(sync):
+    faults = FaultPlan(specs=(FaultSpec("worker_death", rate=1.0,
+                                        rids=(1,)),))
+    # legacy: the BaseException escapes (except Exception won't catch it)
+    eng = _StubEngine(batch=1, sync=sync, faults=FaultInjector(faults))
+    eng.submit([ServeRequest(i) for i in range(3)])
+    with pytest.raises(WorkerDeath):
+        eng.serve()
+    eng.close()
+    # contained: the dead worker's request fails terminally, others serve
+    eng = _StubEngine(batch=1, sync=sync, faults=FaultInjector(faults),
+                      policy=AdmissionPolicy(max_retries=1,
+                                             retry_backoff_ms=1.0))
+    eng.submit([ServeRequest(i) for i in range(3)])
+    eng.serve()
+    done, failed, _ = _conserved(eng, range(3))
+    assert failed == {1} and done == {0, 2}
+    assert isinstance(eng.failed[0].error, WorkerDeath)
+    eng.close()
+
+
+def test_keyboard_interrupt_never_contained():
+    class _Interrupting(_StubEngine):
+        def _dispatch(self, reqs, payloads, stats):
+            raise KeyboardInterrupt
+
+    eng = _Interrupting(batch=2,
+                        policy=AdmissionPolicy(max_retries=5,
+                                               retry_backoff_ms=1.0))
+    eng.submit([ServeRequest(i) for i in range(2)])
+    with pytest.raises(KeyboardInterrupt):
+        eng.serve()
+    eng.close()
+
+
+def test_stage_timeout_watchdog():
+    eng = _StubEngine(batch=1, dispatch_sleep={0: 0.3},
+                      policy=AdmissionPolicy(max_retries=1,
+                                             retry_backoff_ms=1.0,
+                                             stage_timeout_s=0.05))
+    eng.submit([ServeRequest(i) for i in range(2)])
+    eng.serve()
+    done, failed, _ = _conserved(eng, range(2))
+    assert failed == {0} and done == {1}
+    assert isinstance(eng.failed[0].error, StageTimeout)
+    eng.close()
+
+
+def test_slow_wave_stall_injected():
+    faults = FaultInjector(FaultPlan(specs=(
+        FaultSpec("slow_wave", rate=1.0, delay_ms=30.0, max_fires=2),)))
+    eng = _StubEngine(batch=2, faults=faults)
+    eng.submit([ServeRequest(i) for i in range(4)])
+    t0 = time.perf_counter()
+    eng.serve()
+    assert time.perf_counter() - t0 >= 0.05  # two 30ms stalls were real
+    done, failed, _ = _conserved(eng, range(4))
+    assert done == set(range(4)) and not failed
+    assert faults.stats()["fires"]["slow_wave"] == 2
+    eng.close()
+
+
+# -- conservation property under random fault plans --------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_conservation_under_random_faults(seed):
+    """Whatever a random FaultPlan throws at the contained runtime, every
+    request ends in exactly one terminal state in both modes."""
+    for sync in (True, False):
+        eng = _StubEngine(batch=3, sync=sync,
+                          faults=FaultInjector(FaultPlan.random(seed)),
+                          policy=AdmissionPolicy(max_retries=2,
+                                                 retry_backoff_ms=0.5))
+        eng.submit([ServeRequest(i) for i in range(10)])
+        eng.serve()
+        done, failed, shed = _conserved(eng, range(10))
+        assert not shed  # no deadlines/backpressure configured
+        assert done | failed == set(range(10))
+        eng.close()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sync_async_identical_for_request_keyed_faults(seed):
+    """Faults rolled per-request (plan / worker_death seams, solo waves)
+    give each rid the same terminal fate in sync and async modes."""
+    rng = np.random.default_rng(seed)
+    specs = tuple(
+        FaultSpec(seam, rate=float(rng.uniform(0.1, 0.5)))
+        for seam in ("plan", "worker_death") if rng.random() < 0.8) or (
+        FaultSpec("plan", rate=0.3),)
+    plan = FaultPlan(seed=seed, specs=specs)
+
+    def terminal(sync):
+        eng = _StubEngine(batch=1, sync=sync, faults=FaultInjector(plan),
+                          policy=AdmissionPolicy(max_retries=2,
+                                                 retry_backoff_ms=0.5))
+        eng.submit([ServeRequest(i) for i in range(8)])
+        eng.serve()
+        _conserved(eng, range(8))
+        out = {r.rid: (r.status, r.retries)
+               for r in (eng.scheduler.completed + eng.scheduler.failed)}
+        eng.close()
+        return out
+
+    assert terminal(True) == terminal(False)
+
+
+def test_chaos_matrix(chaos_seed):
+    """The CI chaos job's entry point: a resident stub engine survives a
+    randomized fault plan end to end (``--chaos-seeds`` widens the
+    matrix)."""
+    eng = _StubEngine(batch=3,
+                      faults=FaultInjector(FaultPlan.random(chaos_seed)),
+                      policy=AdmissionPolicy(max_retries=2,
+                                             retry_backoff_ms=0.5))
+    eng.serve_forever()
+    handles = []
+    for burst in range(4):
+        handles += eng.submit(
+            [ServeRequest(burst * 10 + i) for i in range(10)])
+        time.sleep(0.002)
+    deadline = time.monotonic() + 30.0
+    while not all(h.done() for h in handles):
+        assert time.monotonic() < deadline, "chaos run wedged"
+        time.sleep(0.005)
+    h = eng.health()
+    assert h["alive"] and h["ready"] and h["resident"]
+    eng.close()
+    rids = [h.request.rid for h in handles]
+    done, failed, shed = _conserved(eng, rids)
+    assert not shed and done | failed == set(rids)
+    assert not eng.health()["alive"]
+
+
+# -- serve_forever lifecycle (stub) ------------------------------------------
+
+
+def test_serve_forever_lifecycle_and_health():
+    eng = _StubEngine(batch=2, fail_rids={5},
+                      policy=AdmissionPolicy(max_retries=1,
+                                             retry_backoff_ms=1.0))
+    t = eng.serve_forever()
+    assert eng.serve_forever() is t  # idempotent while alive
+    handles = eng.submit([ServeRequest(i) for i in range(8)])
+    deadline = time.monotonic() + 15.0
+    while not all(h.done() for h in handles):
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    h = eng.health()
+    assert h["alive"] and h["resident"] and not h["draining"]
+    assert h["n_completed"] == 7 and h["n_failed"] == 1
+    assert h["queue_depth"] == 0 and h["last_wave_age_s"] is not None
+    with pytest.raises(RequestFailedError):
+        handles[5].result(timeout=1.0)
+    eng.close()
+    eng.close()  # idempotent
+    assert not eng.health()["alive"] and not eng.health()["resident"]
+    # the engine stays usable after close: caller-driven serving works
+    h2 = eng.submit(ServeRequest(100))
+    assert h2.result().out == 1000
+    eng.close()
+
+
+def test_close_drains_then_rejects_new_submits():
+    class _SlowPlan(_StubEngine):
+        def _plan(self, r):
+            time.sleep(0.01)
+            return r.rid
+
+    eng = _SlowPlan(batch=1)
+    eng.serve_forever()
+    handles = eng.submit([ServeRequest(i) for i in range(5)])
+    eng.close()  # graceful: the queued backlog is served, not dropped
+    assert all(h.done() for h in handles)
+    assert {h.request.rid for h in handles
+            if h.request.status == "completed"} == set(range(5))
+    # after close the resident thread is gone; _draining was reset, so a
+    # plain submit serves caller-driven again
+    assert eng.submit(ServeRequest(9)).result().out == 90
+    eng.close()
+
+
+# -- circuit breakers (fake clock) -------------------------------------------
+
+
+def test_circuit_breaker_state_machine():
+    now = [0.0]
+    br = CircuitBreaker("x", failure_threshold=2, cooldown_s=5.0,
+                        clock=lambda: now[0])
+    assert br.state == CLOSED and br.allow()
+    assert not br.record_failure()         # 1 strike: still closed
+    assert br.record_failure()             # 2nd strike: trips
+    assert br.state == OPEN and br.trips == 1
+    assert not br.allow()                  # cooling
+    now[0] = 5.1
+    assert br.allow()                      # cooldown passed: one probe
+    assert br.state == HALF_OPEN
+    assert br.record_failure()             # probe failed: re-open
+    assert br.state == OPEN and br.trips == 2
+    now[0] = 10.3
+    assert br.allow() and br.state == HALF_OPEN
+    assert br.record_success()             # probe succeeded: closed
+    assert br.state == CLOSED and br.consecutive_failures == 0
+    assert br.snapshot() == {"state": CLOSED, "consecutive_failures": 0,
+                             "trips": 2}
+    with pytest.raises(ValueError):
+        CircuitBreaker("x", failure_threshold=0)
+
+
+class _NullBackend(Backend):
+    def __init__(self, name, fallback=None):
+        self.name, self.fallback = name, fallback
+
+    def run(self, x, params, plan, *, ctx, **kw):
+        return x
+
+
+def test_breaker_board_routes_along_fallback_chain():
+    reg = BackendRegistry()
+    reg.register("a", _NullBackend("a", fallback="b"))
+    reg.register("b", _NullBackend("b", fallback="c"))
+    reg.register("c", _NullBackend("c"))
+    now = [0.0]
+    board = BreakerBoard(reg, failure_threshold=2, cooldown_s=5.0,
+                         clock=lambda: now[0])
+    assert board.route("a") == "a" and board.generation == 0
+    board.record_failure("a")
+    assert board.route("a") == "a"  # one strike: still closed
+    changed = board.record_failure("a")
+    assert changed and board.generation == 1
+    assert board.route("a") == "b"          # tripped: next in chain
+    for _ in range(2):
+        board.record_failure("b")
+    assert board.route("a") == "c"          # chain walks past b too
+    assert board.allow("c") and not board.allow("a")
+    assert "gen=" in repr(board)
+    # recovery: cooldown -> half-open probe allowed -> success closes,
+    # bumping the generation again (cached plans rotate)
+    now[0] = 6.0
+    assert board.route("a") == "a"
+    gen = board.generation
+    assert board.record_success("a")
+    assert board.generation == gen + 1 and board.route("a") == "a"
+    # unknown names route to themselves (no breaker is ever created)
+    assert board.route("mystery") == "mystery"
+    assert "mystery" not in board.states()
+
+
+def test_breaker_board_fallback_cycle_is_safe():
+    reg = BackendRegistry()
+    reg.register("a", _NullBackend("a", fallback="b"))
+    reg.register("b", _NullBackend("b", fallback="a"))
+    board = BreakerBoard(reg, failure_threshold=1, cooldown_s=99.0)
+    board.record_failure("a")
+    board.record_failure("b")
+    # both blocked and the chain is a cycle: something must still serve
+    assert board.route("a") in ("a", "b")
+
+
+def test_breaker_board_hooks_fire_on_state_change_only():
+    reg = BackendRegistry()
+    reg.register("a", _NullBackend("a"))
+    board = BreakerBoard(reg, failure_threshold=2, cooldown_s=99.0)
+    bumps = []
+    board.add_hook(lambda: bumps.append(board.generation))
+    board.record_failure("a")
+    assert bumps == []          # no state change yet
+    board.record_failure("a")
+    assert bumps == [1]         # trip -> hook (cache invalidation) fires
+    board.record_success("x")   # unknown backend: no-op
+    assert bumps == [1]
+
+    def boom():
+        raise RuntimeError("observer bug")
+
+    board2 = BreakerBoard(reg, failure_threshold=1, cooldown_s=99.0)
+    board2.add_hook(boom)
+    assert board2.record_failure("a")  # hook errors never break serving
+
+
+# -- real engine: breakers, identity, resident serving, streams --------------
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import engine  # noqa: E402
+from repro.data.scenes import N_CLASSES, make_scene  # noqa: E402
+from repro.engine.context import ExecutionContext  # noqa: E402
+from repro.engine.plan import PlanCache  # noqa: E402
+from repro.models.scn import UNetConfig, init_unet  # noqa: E402
+from repro.serving.scene_engine import SceneEngine, SceneRequest  # noqa: E402
+from repro.sparse.tensor import SparseVoxelTensor  # noqa: E402
+
+RES, CAP = 16, 1024
+
+
+def _scene(seed, cap=CAP):
+    coords, feats, _, mask = make_scene(seed, resolution=RES, capacity=cap)
+    return SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                             jnp.asarray(mask))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=CAP,
+                     n_classes=N_CLASSES)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_plan_cache_waiter_sees_builder_error(setup):
+    """Coalesced waiters of a failing build must raise the builder's
+    error (not hang, not silently rebuild); the key is then released so a
+    later caller builds fresh."""
+    cfg, _ = setup
+    cache = PlanCache(capacity=4)
+    t = _scene(810)
+    started, release = threading.Event(), threading.Event()
+    calls: list = []
+    errors: dict = {}
+
+    def failing_builder(t, cfg, **kw):
+        calls.append(1)
+        started.set()
+        assert release.wait(5.0)
+        raise ValueError("injected build failure")
+
+    def worker(i):
+        try:
+            cache.get_or_build(t, cfg, builder=failing_builder,
+                               plan_tiles=False)
+        except ValueError as e:
+            errors[i] = e
+
+    a = threading.Thread(target=worker, args=(0,))
+    a.start()
+    assert started.wait(5.0)          # A is inside the build
+    b = threading.Thread(target=worker, args=(1,))
+    b.start()                         # B coalesces onto A's in-flight build
+    time.sleep(0.05)
+    release.set()                     # ...and only now does the build fail
+    a.join()
+    b.join()
+    # exactly one build ran; both the builder AND the waiter saw its error
+    assert len(calls) == 1
+    assert sorted(errors) == [0, 1]
+    assert all("injected build failure" in str(e) for e in errors.values())
+    assert len(cache) == 0
+    # the key was released: a fresh call rebuilds successfully
+    assert cache.get_or_build(t, cfg, plan_tiles=False) is not None
+    assert len(cache) == 1
+
+
+def test_breaker_trip_invalidates_context_plan_cache(setup):
+    cfg, _ = setup
+    ctx = ExecutionContext(plan_cache=PlanCache(capacity=8))
+    ctx.registry.breakers.configure(failure_threshold=1, cooldown_s=99.0)
+    ctx.plan_cache.get_or_build(_scene(820), cfg, plan_tiles=False)
+    assert len(ctx.plan_cache) == 1
+    ctx.registry.breakers.record_failure("sspnna")  # trips immediately
+    assert len(ctx.plan_cache) == 0  # hook dropped stale-routing plans
+    # breakers are context-scoped: the process default board is untouched
+    assert "sspnna" not in default_registry().breakers.states()
+
+
+def test_faults_disabled_hardened_engine_is_bitwise_identical(setup):
+    """The robustness machinery must be invisible when nothing fails:
+    a hardened engine (retry budget armed, no injector) produces bitwise
+    the same logits as the legacy configuration."""
+    cfg, params = setup
+    scenes = [_scene(830 + i) for i in range(4)]
+
+    def serve(policy):
+        eng = SceneEngine(cfg, params, batch=2, sync=True, policy=policy)
+        handles = eng.submit(
+            [SceneRequest(i, s) for i, s in enumerate(scenes)])
+        eng.serve()
+        out = {h.request.rid: np.asarray(h.result().logits)
+               for h in handles}
+        eng.close()
+        return out
+
+    legacy = serve(None)
+    hardened = serve(AdmissionPolicy(max_retries=2, retry_backoff_ms=1.0))
+    assert legacy.keys() == hardened.keys()
+    for rid in legacy:
+        np.testing.assert_array_equal(legacy[rid], hardened[rid])
+
+
+def test_dispatch_faults_trip_breaker_to_fallback(setup):
+    """5%-style dispatch faults attributed to sspnna: the breaker trips
+    OPEN, new plans reroute to the reference fallback, every request
+    still completes, and the answers match a reference-only engine."""
+    cfg, params = setup
+    spec = engine.build_plan_spec([_scene(100), _scene(101)], cfg,
+                                  mem_budget=16 * 1024)
+    assert any(d.backend == engine.SSPNNA for d in spec.levels)
+    ctx = ExecutionContext(plan_cache=PlanCache())
+    ctx.registry.breakers.configure(failure_threshold=3, cooldown_s=60.0)
+    inj = FaultInjector(FaultPlan(seed=0, specs=(
+        FaultSpec("dispatch", rate=1.0, backend="sspnna", max_fires=3),)))
+    eng = SceneEngine(cfg, params, batch=2, spec=spec, use_kernel=False,
+                      sync=True, ctx=ctx, faults=inj,
+                      policy=AdmissionPolicy(max_retries=4,
+                                             retry_backoff_ms=1.0))
+    scenes = [_scene(300 + i) for i in range(4)]
+    handles = eng.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    eng.serve()
+    results = {h.request.rid: h.result() for h in handles}
+    assert sorted(results) == [0, 1, 2, 3]  # nothing lost to the faults
+    states = ctx.registry.breakers.states()
+    assert states["sspnna"]["state"] == OPEN and states["sspnna"]["trips"] == 1
+    assert eng.health()["breakers"]["sspnna"]["state"] == OPEN
+    assert eng.scheduler.wave_errors == 3
+    eng.close()
+    ref = SceneEngine(cfg, params, batch=2, sync=True)
+    rh = ref.submit([SceneRequest(i, s) for i, s in enumerate(scenes)])
+    ref.serve()
+    for i, h in enumerate(rh):
+        np.testing.assert_allclose(np.asarray(results[i].logits),
+                                   np.asarray(h.result().logits),
+                                   rtol=1e-5, atol=1e-5)
+    ref.close()
+
+
+def test_serve_forever_survives_200_requests_with_faults(setup):
+    """The acceptance bar: a resident real engine at a 5% dispatch fault
+    rate survives 200 requests — conservation holds, the vast majority
+    complete, and health stays coherent through close()."""
+    cfg, params = setup
+    inj = FaultInjector(FaultPlan(seed=3, specs=(
+        FaultSpec("dispatch", rate=0.05),)))
+    eng = SceneEngine(cfg, params, batch=2, sync=True, faults=inj,
+                      policy=AdmissionPolicy(max_retries=3,
+                                             retry_backoff_ms=1.0))
+    eng.serve_forever()
+    scenes = [_scene(840 + i) for i in range(6)]  # cycled: plan-cache hits
+    handles = [eng.submit(SceneRequest(i, scenes[i % len(scenes)]))
+               for i in range(200)]
+    deadline = time.monotonic() + 300.0
+    while not all(h.done() for h in handles):
+        assert time.monotonic() < deadline, "resident serving wedged"
+        time.sleep(0.01)
+    assert eng.health()["alive"]
+    eng.close()
+    slo = eng.slo_stats()
+    assert slo["n_completed"] + slo["n_failed"] == 200
+    assert slo["n_completed"] >= 190  # non-cliff: faults cost retries,
+    assert inj.stats()["fires"].get("dispatch", 0) > 0  # not completions
+    for h in handles:
+        try:
+            r = h.result(timeout=1.0)
+            assert r.logits is not None and not np.any(np.isnan(r.logits))
+        except RequestFailedError:
+            pass
+    assert not eng.health()["alive"]
+
+
+def test_corrupt_stream_frame_is_contained(setup):
+    """A corrupted LiDAR frame (seeded garbage coords) must not wedge the
+    stream: the frame is retried clean (or failed terminally) and later
+    frames still serve."""
+    cfg, params = setup
+    from repro.data.scenes import make_lidar_sweep
+    frames, shifts = make_lidar_sweep(9, 4, resolution=RES, capacity=256,
+                                      step=4, churn=0.1)
+    scenes = [SparseVoxelTensor(jnp.asarray(c), jnp.asarray(f),
+                                jnp.asarray(m)) for c, f, _, m in frames]
+    small = UNetConfig(widths=(8, 16), reps=1, resolution=RES, capacity=256,
+                       n_classes=N_CLASSES)
+    sp = init_unet(jax.random.PRNGKey(0), small)
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("corrupt_frame", rate=1.0, rids=(1,), max_fires=1),)))
+    eng = SceneEngine(small, sp, batch=2, sync=True, faults=inj,
+                      policy=AdmissionPolicy(max_retries=2,
+                                             retry_backoff_ms=1.0))
+    reqs = eng.serve_stream(scenes, shifts)
+    assert inj.stats()["fires"]["corrupt_frame"] == 1
+    by_status = {r.rid: r.status for r in reqs}
+    # nothing is lost and the corrupted frame never wedges its successors
+    assert all(s in ("completed", "failed") for s in by_status.values())
+    assert by_status[0] == by_status[2] == by_status[3] == "completed"
+    for r in reqs:
+        if r.status == "completed":
+            assert not np.any(np.isnan(r.logits))
+    eng.close()
