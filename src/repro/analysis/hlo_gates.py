@@ -1,0 +1,149 @@
+"""Reusable compiled-artifact gates on top of ``launch.hlo_analysis``.
+
+The fused SSpNNA kernel's whole contract is *what the compiled graph does
+not contain*: no XLA gather, no scatter, no (T, dI, C) working-set
+intermediate in HBM. Until now those assertions lived ad hoc inside
+individual tests; these gates make them reusable against any jitted
+function (single-device, ``shard_map``-sharded, streaming) and add two
+more compiled-artifact budgets:
+
+* ``REPRO-H001`` — forbidden opcode present in the compiled HLO
+  (default set: ``gather``, ``scatter`` — collective ``all-gather`` /
+  ``reduce-scatter`` are distinct opcodes and pass).
+* ``REPRO-H002`` — recompile budget exceeded: a jitted function compiled
+  more signatures than its bucket family allows (a silent shape leak
+  turns "<=1 compile per bucket" into a compile per scene).
+* ``REPRO-H003`` — modeled VMEM footprint of the fused Pallas kernel
+  (from the static block shapes a ``Dispatch`` pins) exceeds the budget.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.launch.hlo_analysis import parse_hlo
+
+DEFAULT_FORBIDDEN = ("gather", "scatter")
+
+#: default VMEM budget for H003 (16 MiB, a TPU core's VMEM)
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def compiled_text(fn, *args, **kw) -> str:
+    """Optimized HLO text of ``fn`` jitted on ``args`` (accepts an already
+    jitted function, a plain callable, or a string of HLO)."""
+    if isinstance(fn, str):
+        return fn
+    import jax
+    if not hasattr(fn, "lower"):
+        fn = jax.jit(fn)
+    return fn.lower(*args, **kw).compile().as_text()
+
+
+def forbidden_ops(hlo_text: str,
+                  forbidden: tuple[str, ...] = DEFAULT_FORBIDDEN,
+                  *, where: str = "hlo") -> list[Finding]:
+    """REPRO-H001 for every instruction whose opcode is in ``forbidden``
+    (exact opcode match per computation)."""
+    out: list[Finding] = []
+    bad = set(forbidden)
+    for comp in parse_hlo(hlo_text).values():
+        hits: dict[str, int] = {}
+        for inst in comp.instructions.values():
+            if inst.opcode in bad:
+                hits[inst.opcode] = hits.get(inst.opcode, 0) + 1
+        for op, n in sorted(hits.items()):
+            out.append(Finding(
+                "REPRO-H001", f"{where}:{comp.name}",
+                f"forbidden op {op!r} appears {n}x in computation "
+                f"{comp.name!r}"))
+    return out
+
+
+def gate_forbidden_ops(fn, *args, forbidden=DEFAULT_FORBIDDEN,
+                       where: str = "hlo", **kw) -> list[Finding]:
+    """Compile ``fn(*args)`` and apply :func:`forbidden_ops`."""
+    return forbidden_ops(compiled_text(fn, *args, **kw),
+                         forbidden, where=where)
+
+
+# -- recompile budgets ------------------------------------------------------
+
+def compile_count(fn) -> int:
+    """Number of signatures a ``jax.jit`` function has compiled."""
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(f"{fn!r} is not a jitted function")
+    return int(size())
+
+
+def gate_compile_budget(fn_or_count, max_signatures: int,
+                        *, where: str = "jit") -> list[Finding]:
+    """REPRO-H002 when a jitted function (or a raw signature count — e.g.
+    ``SceneEngine.n_compilations``) exceeds its bucket family's budget."""
+    n = fn_or_count if isinstance(fn_or_count, int) \
+        else compile_count(fn_or_count)
+    if n > max_signatures:
+        return [Finding(
+            "REPRO-H002", where,
+            f"{n} compiled signatures exceeds the bucket budget of "
+            f"{max_signatures} (shape leak: something varies per call "
+            f"that the signature family should pin)")]
+    return []
+
+
+# -- modeled VMEM footprint -------------------------------------------------
+
+def modeled_vmem_bytes(*, delta_o: int, delta_i: int, c_in: int,
+                       block_n: int, k: int = 27,
+                       itemsize: int = 4) -> int:
+    """Static VMEM footprint of the fused SSpNNA kernel for one grid step,
+    from the block shapes a ``Dispatch`` pins (see
+    ``kernels/sspnna/sspnna.py`` scratch_shapes / in_specs):
+
+    * ``2 * delta_i * c_in`` — double-buffered DMA working set (scratch);
+    * ``delta_o * block_n`` — output staging tile (scratch);
+    * ``2 * (delta_o * k)`` — pipelined ``local_idx`` block (int32);
+    * ``2 * (k * c_in * block_n)`` — pipelined weight block.
+
+    The factor 2 on the in_spec blocks is Pallas's input double buffering.
+    """
+    scratch = 2 * delta_i * c_in * itemsize + delta_o * block_n * itemsize
+    idx_blk = 2 * delta_o * k * 4
+    w_blk = 2 * k * c_in * block_n * itemsize
+    return scratch + idx_blk + w_blk
+
+
+def gate_vmem_budget(dispatch, c_in: int, *,
+                     budget: int = DEFAULT_VMEM_BUDGET,
+                     k: int = 27, where: str = "dispatch"
+                     ) -> list[Finding]:
+    """REPRO-H003 when a fused-kernel dispatch's modeled VMEM exceeds the
+    budget. Non-tile dispatches (no ``delta_i``) pass trivially."""
+    d_o = getattr(dispatch, "delta_o", None)
+    d_i = getattr(dispatch, "delta_i", None)
+    bn = getattr(dispatch, "block_n", None) or c_in
+    if not d_o or not d_i:
+        return []
+    need = modeled_vmem_bytes(delta_o=d_o, delta_i=d_i, c_in=c_in,
+                              block_n=bn, k=k)
+    if need > budget:
+        return [Finding(
+            "REPRO-H003", where,
+            f"modeled VMEM {need} B > budget {budget} B "
+            f"(delta_o={d_o}, delta_i={d_i}, c_in={c_in}, block_n={bn})")]
+    return []
+
+
+def gate_plan_vmem(plan, widths, *, budget: int = DEFAULT_VMEM_BUDGET,
+                   where: str = "plan") -> list[Finding]:
+    """Apply :func:`gate_vmem_budget` to every tiled conv of a
+    ``ScenePlan`` (``widths[li]`` is the level's channel count)."""
+    out: list[Finding] = []
+    for li, lvl in enumerate(plan.levels):
+        conv = lvl.sub
+        if getattr(conv, "tiles", None) is None:
+            continue
+        c_in = widths[li] if li < len(widths) else widths[-1]
+        out.extend(gate_vmem_budget(
+            conv.dispatch, int(c_in), budget=budget,
+            where=f"{where}.levels[{li}].sub"))
+    return out

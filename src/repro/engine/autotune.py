@@ -40,13 +40,14 @@ import json
 import os
 import re
 import tempfile
-import threading
 import time
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis.runtime import ordered_rlock
 
 from repro.engine.plan import (
     _PLAN_VERSION,
@@ -239,7 +240,7 @@ class CostTable:
         self._misses: dict[ShapeSig, dict] = {}
         self._group_hits: dict[ShapeSig, int] = {}
         self._seq = 0
-        self._lock = threading.RLock()
+        self._lock = ordered_rlock("autotune")
         self._flip_hooks: list = []
 
     def __repr__(self):

@@ -38,9 +38,9 @@ probe plan through; a success closes it, a failure re-opens it.
 """
 from __future__ import annotations
 
-import threading
 import time
 
+from repro.analysis.runtime import ordered_rlock
 from repro.core.sparse_conv import reference_conv_cirf
 from repro.engine.plan import REFERENCE, SSPNNA, ConvPlan
 from repro.kernels.sspnna.ops import run_sspnna_conv
@@ -157,7 +157,7 @@ class BreakerBoard:
         self.generation = 0
         self._breakers: dict[str, CircuitBreaker] = {}
         self._hooks: list = []
-        self._lock = threading.RLock()
+        self._lock = ordered_rlock("breakers")
 
     def configure(self, *, failure_threshold: int | None = None,
                   cooldown_s: float | None = None) -> "BreakerBoard":

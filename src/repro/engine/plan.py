@@ -42,6 +42,7 @@ from repro.core.host_meta import (
     transposed_coir_np,
 )
 from repro.core.soar import raster_order, soar_order
+from repro.analysis.runtime import ordered_condition, ordered_lock
 from repro.core.tiles import build_tile_plan, dma_tile_tables, max_tiles
 from repro.sparse.tensor import SparseVoxelTensor
 
@@ -321,7 +322,7 @@ class PlanCache:
         # key -> {"ev": Event, "error": BaseException | None}; the error
         # is set before the event so coalesced waiters see the failure
         self._building: dict[str, dict] = {}
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("plan_cache")
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
@@ -414,7 +415,8 @@ class PlanCache:
             rec["error"] = e
             rec["ev"].set()
             raise
-        entry = {"host": host, "device": None, "dev_lock": threading.Lock()}
+        entry = {"host": host, "device": None,
+                 "dev_lock": ordered_lock("plan_cache.dev")}
         with self._lock:
             self.misses += 1
             self._plans[key] = entry
@@ -438,7 +440,7 @@ class PlanCache:
                 self._plans.move_to_end(key)
             else:
                 entry = {"host": host_plan, "device": None,
-                         "dev_lock": threading.Lock()}
+                         "dev_lock": ordered_lock("plan_cache.dev")}
                 self._plans[key] = entry
                 while len(self._plans) > self.max_entries:
                     self._plans.popitem(last=False)
@@ -886,7 +888,7 @@ class StreamPlanState:
                      f"|tiles={self.plan_tiles}|{order}|{soar_chunk}")
         self.meta = StreamMetaState(cfg.resolution, cfg.capacity,
                                     len(cfg.widths))
-        self._cond = threading.Condition()
+        self._cond = ordered_condition("stream.plan")
         self._next_frame = 0
         self._gap = False
         self._prev_plan: ScenePlan | None = None

@@ -45,6 +45,7 @@ import time
 import warnings
 from dataclasses import dataclass, field
 
+from repro.analysis.runtime import ordered_lock
 from repro.serving.faults import WorkerDeath
 
 from repro.serving.scheduler import (
@@ -184,7 +185,7 @@ class RequestHandle:
 
 #: guards resident-thread creation (ServingBase is a mixin with no
 #: __init__, so per-instance state starts as class-attribute defaults)
-_SERVE_LOCK = threading.Lock()
+_SERVE_LOCK = ordered_lock("serving.serve")
 
 
 class ServingBase:

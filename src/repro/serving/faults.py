@@ -31,9 +31,10 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import hashlib
-import threading
 
 import numpy as np
+
+from repro.analysis.runtime import ordered_lock
 
 #: Named injection points. Handlers exist for each (see README
 #: "Fault tolerance"): scheduler retry budget, PlanCache error
@@ -144,7 +145,7 @@ class FaultInjector:
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("faults.injector")
         # per-spec-index counters
         self._opps = [0] * len(plan.specs)
         self._fired = [0] * len(plan.specs)
@@ -256,7 +257,7 @@ class FaultInjector:
 # threads and must see the injector installed by the test's main thread.
 
 _ACTIVE: FaultInjector | None = None
-_ACTIVE_LOCK = threading.Lock()
+_ACTIVE_LOCK = ordered_lock("faults.install")
 
 
 def active() -> FaultInjector | None:

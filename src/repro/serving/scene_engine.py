@@ -72,13 +72,13 @@ shims there.
 from __future__ import annotations
 
 import dataclasses
-import threading
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import ordered_lock
 from repro.core.host_meta import pack_stream_frame_np
 from repro.engine import api as engine_api
 from repro.engine.context import ExecutionContext
@@ -146,7 +146,7 @@ class StreamHandle:
         self.engine = engine
         self.state = state
         self._next_frame = 0
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("stream.handle")
 
     @property
     def stream_id(self) -> str:

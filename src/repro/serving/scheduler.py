@@ -90,6 +90,7 @@ from concurrent.futures import ThreadPoolExecutor
 from concurrent.futures import TimeoutError as _FutureTimeout
 from dataclasses import dataclass, field
 
+from repro.analysis.runtime import ordered_lock
 from repro.serving.faults import WorkerDeath
 
 # request lifecycle states (mirrored by serving.api.ServeRequest.status)
@@ -263,7 +264,7 @@ class WaveScheduler:
         self._wave = 0
         self._seq = 0
         self._pool: ThreadPoolExecutor | None = None  # lazy, persists runs
-        self._pool_lock = threading.Lock()
+        self._pool_lock = ordered_lock("scheduler.pool")
         self._idle = threading.Event()  # cleared while run() is on a thread
         self._idle.set()
         # stride-scheduling state: per-tenant virtual pass + global floor

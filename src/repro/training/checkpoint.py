@@ -76,7 +76,11 @@ def save_async(state, ckpt_dir: str, step: int, **kw) -> threading.Thread:
     keys, leaves, _ = _leaf_paths(state)
     host = [np.asarray(jax.device_get(x)) for x in leaves]
     snapshot = jax.tree_util.tree_unflatten(_leaf_paths(state)[2], host)
-    th = threading.Thread(target=save, args=(snapshot, ckpt_dir, step), kwargs=kw)
+    # daemon is safe: save() lands atomically (tmp dir + rename), so a
+    # writer killed at interpreter exit leaves no partial checkpoint —
+    # callers that need durability join via the handle / wait_for_saves()
+    th = threading.Thread(target=save, args=(snapshot, ckpt_dir, step),
+                          kwargs=kw, name=f"ckpt-save-{step}", daemon=True)
     th.start()
     _SAVE_THREADS.append(th)
     return th

@@ -1,9 +1,18 @@
 """HLO cost walker: verified against known-flop modules (incl. nested scans),
-and against xla cost_analysis' known while-loop undercount."""
+and against xla cost_analysis' known while-loop undercount. Plus the
+compiled-artifact gates (``repro.analysis.hlo_gates``) applied to the real
+execution paths: fused single-device, sharded (``shard_map``), streaming."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.launch.hlo_analysis import analyze, xla_cost_dict
+from repro.analysis.hlo_gates import (
+    compiled_text,
+    forbidden_ops,
+    gate_compile_budget,
+    gate_plan_vmem,
+)
+from repro.launch.hlo_analysis import analyze, parse_hlo, xla_cost_dict
 
 
 def _compile(f, *args):
@@ -76,3 +85,85 @@ def test_walker_bytes_reasonable_for_single_matmul():
     # in+out bytes of the dot (2 operands + 1 output, w/ possible converts)
     lo = 3 * 256 * 256 * 2
     assert lo * 0.5 <= cost.bytes <= lo * 6
+
+
+# ---------------------------------------------------------------------------
+# compiled-artifact gates on the real execution paths
+# ---------------------------------------------------------------------------
+
+def _scene(res=16, cap=512):
+    from repro.data.scenes import N_CLASSES, make_scene
+    from repro.models.scn import UNetConfig
+    from repro.sparse.tensor import SparseVoxelTensor
+    cfg = UNetConfig(widths=(8, 16), reps=1, resolution=res, capacity=cap,
+                     n_classes=N_CLASSES)
+    coords, feats, _, mask = make_scene(0, resolution=res, capacity=cap)
+    t = SparseVoxelTensor(jnp.asarray(coords), jnp.asarray(feats),
+                          jnp.asarray(mask))
+    return t, cfg
+
+
+def _gate_fused_conv(plan):
+    """No gather/scatter in the fused SSpNNA kernel of ``plan``'s first
+    tiled conv; exactly one compiled signature."""
+    from repro.kernels.sspnna.ops import run_sspnna_conv
+    lvl = next(l for l in plan.levels if l.sub.tiles is not None)
+    v = int(np.asarray(lvl.mask).shape[0])
+    tl = lvl.sub.tiles
+    orow, irow = jnp.asarray(tl.out_rows), jnp.asarray(tl.in_rows)
+    li, pcnt = jnp.asarray(tl.local_idx), jnp.asarray(tl.pair_counts)
+    rng = np.random.default_rng(0)
+    c = 8
+    feats = jnp.asarray(rng.normal(size=(v, c)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(27, c, c)) * 0.1, jnp.float32)
+
+    def fused(f, ww):
+        return run_sspnna_conv(f, ww, orow, irow, li, n_out=v,
+                               pair_counts=pcnt, use_kernel=True)
+
+    jf = jax.jit(fused)
+    assert forbidden_ops(compiled_text(jf, feats, w), where="fused") == []
+    assert gate_compile_budget(jf, 1, where="fused") == []
+
+
+def test_streaming_path_fused_kernel_gates():
+    """The fused kernel compiled off a *streaming* plan (frame 1, patched
+    under an ego shift) contains no gather/scatter, and the plan's modeled
+    VMEM stays within budget."""
+    from repro import engine
+    from repro.engine.plan import StreamPlanState
+    t, cfg = _scene()
+    spec = engine.build_plan_spec([t], cfg, mem_budget=64 * 1024)
+    state = StreamPlanState(cfg, spec=spec, wait_s=30.0)
+    state.plan_frame(t, 0)
+    _, plan, _, _ = state.plan_frame(t, 1, (1, 0, 0))
+    assert gate_plan_vmem(plan, cfg.widths) == []
+    _gate_fused_conv(plan)
+
+
+def test_sharded_path_gates_exact_opcode_match():
+    """The sharded (``shard_map``) scene program: no scatter anywhere (the
+    plane accumulation is dense matmuls), and its collective ``all-gather``
+    ops are distinct opcodes that must never trip a ``gather`` gate."""
+    from repro import engine
+    from repro.dist.compat import make_mesh
+    from repro.models.scn import init_unet
+    t, cfg = _scene()
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    splan = engine.build_sharded_scene_plan(
+        t, cfg, layout=engine.ShardLayout(n_shards=2))
+    mesh = make_mesh((2,), ("shard",), devices=jax.devices()[:2])
+    ctx = engine.ExecutionContext(mesh=mesh)
+    jf = jax.jit(lambda p, f, pl: engine.apply_unet(p, f, pl, ctx=ctx))
+    text = compiled_text(jf, params, t.feats, splan)
+    assert forbidden_ops(text, ("scatter",), where="sharded") == []
+    n_ag = sum(1 for comp in parse_hlo(text).values()
+               for inst in comp.instructions.values()
+               if inst.opcode == "all-gather")
+    assert n_ag > 0  # real collectives are present on the 2-device mesh
+    # exact-match: gating "all-gather" finds them...
+    assert forbidden_ops(text, ("all-gather",), where="sharded") != []
+    # ...but a "gather" gate only ever reports plain gathers, never the
+    # collective (the sharded local conv is gather-based by design)
+    for f in forbidden_ops(text, ("gather",), where="sharded"):
+        assert "'gather'" in f.message and "all-gather" not in f.message
